@@ -1,0 +1,27 @@
+"""Paper SM B.1.4 (Fig. B.4): batched data generation — solve the same
+Poisson operator for B right-hand sides; derived: per-sample time (should
+flatten as batch amortizes fixed overheads, slope < 1)."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import unit_cube_tet
+from repro.fem import PoissonProblem
+
+from .common import emit, time_fn
+
+
+def main():
+    prob = PoissonProblem(unit_cube_tet(8))
+    rng = np.random.default_rng(0)
+    for batch in (1, 4, 16, 64):
+        fb = jnp.asarray(rng.normal(size=(batch, prob.space.num_dofs)))
+        t = time_fn(lambda: prob.solve_batch(fb)[0], warmup=1, iters=3)
+        emit(
+            f"batch_generation_B{batch}", t,
+            f"us_per_sample={t / batch:.1f};dofs={prob.space.num_dofs}",
+        )
+
+
+if __name__ == "__main__":
+    main()

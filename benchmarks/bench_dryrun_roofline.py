@@ -1,0 +1,43 @@
+"""Harness deliverable (g): the roofline table, read from the dry-run JSON
+(run ``python -m repro.launch.dryrun --all`` first; this consumes its
+output).  Emits one CSV row per (arch × shape × mesh) with the three terms
+and the bottleneck; skips gracefully if no dry-run results exist."""
+
+import json
+import os
+
+from .common import emit
+
+RESULTS = os.environ.get(
+    "DRYRUN_RESULTS",
+    "dryrun_results_singlepod.json"
+    if os.path.exists("dryrun_results_singlepod.json")
+    else "dryrun_results.json",
+)
+
+
+def main():
+    if not os.path.exists(RESULTS):
+        emit("dryrun_roofline_missing", 0.0, f"run repro.launch.dryrun first ({RESULTS})")
+        return
+    rows = json.load(open(RESULTS))
+    for r in rows:
+        name = f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}"
+        if r["status"] != "ok":
+            emit(name, 0.0, f"status={r['status']}")
+            continue
+        emit(
+            name,
+            max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"]) * 1e6,
+            (
+                f"bottleneck={r['bottleneck']};"
+                f"t_comp={r['t_compute_s']:.2e};t_mem={r['t_memory_s']:.2e};"
+                f"t_coll={r['t_collective_s']:.2e};"
+                f"useful_flops={r['useful_flops_ratio']:.3f};"
+                f"roofline_frac={r['roofline_fraction']:.3f}"
+            ),
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Paper Fig. 4 + SM B.2.4 (Fig. B.12): wall-clock of one loss evaluation
+(forward AND backward) vs DoFs for supervised / TensorPILS / PINN objectives
+on the same SIREN backbone.  The claim to validate: PINN grows much faster
+with DoFs (AD-through-space overhead) while TensorPILS tracks the
+supervised baseline."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import DirichletCondenser, FunctionSpace, GalerkinAssembler, unit_square_tri
+from repro.core.mesh import element_for_mesh
+from repro.pils import GalerkinResidualLoss, pinn_poisson_loss, siren_apply, siren_init
+
+from .common import emit, time_fn
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    params = siren_init(key, 2, 64, 1, depth=4)
+
+    for n in (16, 32, 64):
+        m = unit_square_tri(n)
+        space = FunctionSpace(m, element_for_mesh(m))
+        asm = GalerkinAssembler(space)
+        bc = DirichletCondenser(asm, space.boundary_dofs())
+        gl = GalerkinResidualLoss(asm, bc, f=1.0)
+        pts = jnp.asarray(space.dof_points)
+        free = np.asarray(bc.free_mask, bool)
+        interior, boundary = pts[free], pts[~free]
+        f_int = jnp.ones(interior.shape[0])
+        target = jnp.zeros(pts.shape[0])
+        dofs = space.num_dofs
+
+        sup = jax.jit(lambda p: jnp.mean((siren_apply(p, pts)[:, 0] - target) ** 2))
+        pils = jax.jit(lambda p: gl.loss_from_net(siren_apply, p))
+        pinn = jax.jit(
+            lambda p: pinn_poisson_loss(siren_apply, p, interior, f_int, boundary)
+        )
+        g_sup = jax.jit(jax.grad(lambda p: jnp.mean((siren_apply(p, pts)[:, 0] - target) ** 2)))
+        g_pils = jax.jit(jax.grad(lambda p: gl.loss_from_net(siren_apply, p)))
+        g_pinn = jax.jit(
+            jax.grad(lambda p: pinn_poisson_loss(siren_apply, p, interior, f_int, boundary))
+        )
+
+        for name, fn in (("supervised", sup), ("tensorpils", pils), ("pinn", pinn)):
+            emit(f"loss_fwd_{name}_dof{dofs}", time_fn(fn, params), f"dofs={dofs}")
+        for name, fn in (("supervised", g_sup), ("tensorpils", g_pils), ("pinn", g_pinn)):
+            emit(
+                f"loss_bwd_{name}_dof{dofs}",
+                time_fn(lambda: jax.tree.leaves(fn(params))[0]),
+                f"dofs={dofs}",
+            )
+
+
+if __name__ == "__main__":
+    main()

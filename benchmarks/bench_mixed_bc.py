@@ -1,0 +1,56 @@
+"""Paper SM B.1.5 (Table B.3): mixed Dirichlet+Neumann+Robin Poisson on a
+disk and a non-convex (annulus-sector 'boomerang') domain with an analytic
+solution; derived: relative error (paper band: < 1e-4 on comparable meshes)
+and end-to-end assembly+solve time."""
+
+import numpy as np
+
+from repro.core import annulus_sector_tri, disk_tri
+from repro.fem import MixedBCPoisson
+
+from .common import emit, time_fn
+
+
+def _run(mesh, name, r_outer=1.0):
+    # Neumann/Robin only on the outer circular arc (bottom half) so the
+    # normal is (x, y)/r and the analytic data stays simple; everything
+    # else is Dirichlet.
+    def on_arc(c):
+        r = np.sqrt(c[:, 0] ** 2 + c[:, 1] ** 2)
+        return (r > 0.95 * r_outer) & (c[:, 1] <= 0)
+
+    prob = MixedBCPoisson(
+        mesh,
+        dirichlet_pred=lambda c: ~on_arc(c),
+        neumann_pred=lambda c: on_arc(c) & (c[:, 0] > 0),
+        robin_pred=lambda c: on_arc(c) & (c[:, 0] <= 0),
+    )
+    # u = x is harmonic; BC data chosen to match on each part
+    pts = prob.space.dof_points
+    r_at = lambda x: np.sqrt(x[..., 0] ** 2 + x[..., 1] ** 2)
+
+    def solve():
+        return prob.solve(
+            f=0.0,
+            g_neumann=lambda x: x[..., 0] / r_at(x),
+            robin_alpha=1.0,
+            g_robin=lambda x: x[..., 0] / r_at(x) + x[..., 0],
+            dirichlet_values=lambda p: p[:, 0],
+        )
+
+    res = solve()
+    err = np.linalg.norm(np.asarray(res.u) - pts[:, 0]) / np.linalg.norm(pts[:, 0])
+    t = time_fn(lambda: solve().u, warmup=0, iters=3)
+    emit(
+        f"mixed_bc_{name}", t,
+        f"dofs={prob.space.num_dofs};rel_err={err:.2e};relres={res.residual:.1e}",
+    )
+
+
+def main():
+    _run(disk_tri(14, center=(0.0, 0.0), radius=1.0), "disk")
+    _run(annulus_sector_tri(10, 48), "boomerang")
+
+
+if __name__ == "__main__":
+    main()

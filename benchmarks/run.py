@@ -1,0 +1,60 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Module → paper artifact map:
+  bench_assembly_scaling   — Fig. 1 / §2 O(1)-graph property
+  bench_solver_scaling     — Fig. 2 (3D Poisson + elasticity scaling)
+  bench_mixed_bc           — SM B.1.5 Table B.3 (mixed-BC Poisson)
+  bench_batch_generation   — SM B.1.4 Fig. B.4 (batched RHS solves)
+  bench_neural_solvers     — Table 1 (PINN/VPINN/DeepRitz/TensorPILS)
+  bench_loss_eval          — Fig. 4 / Fig. B.12 (loss-eval cost vs DoF)
+  bench_operator_learning  — Table 2 (wave operator learning, ID/OOD)
+  bench_topo_opt           — Table 3 (cantilever SIMP)
+  bench_kernels            — Pallas kernel microbench (interpret mode)
+  bench_dryrun_roofline    — harness roofline table (from dry-run JSON)
+"""
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (
+        bench_assembly_scaling,
+        bench_batch_generation,
+        bench_dryrun_roofline,
+        bench_kernels,
+        bench_loss_eval,
+        bench_mixed_bc,
+        bench_neural_solvers,
+        bench_operator_learning,
+        bench_solver_scaling,
+        bench_topo_opt,
+    )
+
+    modules = [
+        bench_assembly_scaling,
+        bench_solver_scaling,
+        bench_mixed_bc,
+        bench_batch_generation,
+        bench_neural_solvers,
+        bench_loss_eval,
+        bench_operator_learning,
+        bench_topo_opt,
+        bench_kernels,
+        bench_dryrun_roofline,
+    ]
+    print("name,us_per_call,derived")
+    failed = []
+    for mod in modules:
+        try:
+            mod.main()
+        except Exception:
+            failed.append(mod.__name__)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED_MODULES={failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,28 @@
+"""Quickstart: solve a 3D Poisson problem with TensorMesh in ~10 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax.numpy as jnp
+
+from repro.core import unit_cube_tet
+from repro.fem import PoissonProblem
+
+# -Δu = 1 on the unit cube, u = 0 on the boundary
+problem = PoissonProblem(unit_cube_tet(8))
+result = problem.solve(f=1.0, tol=1e-10)
+
+print(f"DoFs:               {problem.space.num_dofs}")
+print(f"CG iterations:      {result.iters}")
+print(f"relative residual:  {result.residual:.2e}   (paper tolerance: 1e-10)")
+print(f"max u:              {float(result.u.max()):.6f}  (≈0.056 as h→0)")
+
+# spatially varying coefficient + batched right-hand sides (many-query mode)
+result2 = problem.solve(rho=lambda x: 1.0 + x[..., 0], f=1.0)
+print(f"variable-ρ solve:   residual {result2.residual:.2e}")
+
+import numpy as np
+
+f_batch = jnp.asarray(np.random.default_rng(0).normal(size=(8, problem.space.num_dofs)))
+us, iters = problem.solve_batch(f_batch)
+print(f"batched solve:      {us.shape[0]} RHS in one vmapped call, iters={list(map(int, iters))}")

@@ -1,0 +1,1 @@
+from .roofline import RooflineReport, analyze_compiled, collective_bytes_from_hlo  # noqa: F401

@@ -1,0 +1,323 @@
+"""Loop-aware HLO cost model.
+
+``compiled.cost_analysis()`` counts each ``while`` body **once**, independent
+of trip count (verified empirically — see EXPERIMENTS.md §Dry-run), which
+under-counts scan-over-layers / grad-accum programs by orders of magnitude.
+This module re-derives FLOPs / HBM bytes / collective bytes by walking the
+*optimized, partitioned* HLO text:
+
+  * ``while`` ops multiply body+condition cost by the trip count read from
+    XLA's ``backend_config={"known_trip_count":{"n":...}}`` (fallback: the
+    ``compare(ind, constant(N)), direction=LT`` pattern in the condition;
+    loops with dynamic trip counts fall back to 1 and are counted in
+    ``dynamic_loops``),
+  * FLOPs: ``dot`` = 2·|result|·K (K = product of lhs contracting extents,
+    resolved through a per-computation symbol table since operand shapes are
+    not repeated in optimized HLO); elementwise/reduce ops = |result| (VPU),
+  * bytes (primary, TPU-projected): dot/conv operands+results (the traffic
+    that must stream through HBM around MXU ops), collective results, and
+    dynamic-update-slice results (KV-cache writes).  The CPU backend emits
+    many more, smaller fusions than a TPU compiler would, so counting all
+    fusion boundaries over-states TPU HBM traffic ~10–20×; that number is
+    still recorded as ``bytes_upper`` (as-compiled upper bound).  The primary
+    model is self-consistent with the machine-balance analysis in
+    EXPERIMENTS.md §Roofline,
+  * collectives: result bytes (operand bytes for reduce-scatter) × enclosing
+    trip counts, split by kind.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+__all__ = ["HloCost", "analyze_hlo_text"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "power", "exponential",
+    "exponential-minus-one", "log", "log-plus-one", "rsqrt", "sqrt", "cbrt",
+    "tanh", "maximum", "minimum", "compare", "select", "and", "or", "xor",
+    "not", "negate", "abs", "convert", "reduce", "cosine", "sine",
+    "logistic", "floor", "ceil", "sign", "remainder", "atan2", "clamp",
+    "reduce-window",
+}
+_FREE_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "iota", "copy-start", "copy-done", "partition-id",
+    "replica-id", "opt-barrier",
+}
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%([\w.\-]+)\s*\(")
+_OP_RE = re.compile(
+    r"^(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(.*?\)|\S+)\s+([\w\-]+)\((.*)$"
+)
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
+
+
+def _shape_list(type_str: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(x) for x in dims.split(",")] if dims else []))
+    return out
+
+
+def _bytes(shapes) -> int:
+    tot = 0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        tot += n * _DTYPE_BYTES[dt]
+    return tot
+
+
+def _elems(shapes) -> int:
+    tot = 0
+    for _, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        tot += n
+    return tot
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0          # primary (TPU-projected) HBM traffic
+    bytes_upper: float = 0.0    # all fusion-boundary operands+results
+    collective_bytes: float = 0.0
+    collective_by_kind: dict = dataclasses.field(default_factory=dict)
+    dynamic_loops: int = 0
+
+    def add(self, other: "HloCost", mult: float = 1.0):
+        self.flops += mult * other.flops
+        self.bytes += mult * other.bytes
+        self.bytes_upper += mult * other.bytes_upper
+        self.collective_bytes += mult * other.collective_bytes
+        for k, v in other.collective_by_kind.items():
+            self.collective_by_kind[k] = (
+                self.collective_by_kind.get(k, 0.0) + mult * v
+            )
+        self.dynamic_loops += other.dynamic_loops
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    type_str: str
+    kind: str
+    rest: str           # operand list + attributes (from the opening paren)
+
+
+def _parse(hlo: str):
+    comps: dict[str, list[_Op]] = {}
+    entry = None
+    cur = None
+    for raw in hlo.splitlines():
+        line = raw.strip()
+        if cur is None:
+            m = _COMP_HDR.match(line)
+            if m and line.endswith("{"):
+                cur = m.group(2)
+                comps[cur] = []
+                if m.group(1):
+                    entry = cur
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            comps[cur].append(_Op(m.group(1), m.group(2), m.group(3), m.group(4)))
+    return comps, entry
+
+
+def _operands(rest: str) -> list[str]:
+    args = rest.split(")", 1)[0]
+    return re.findall(r"%([\w.\-]+)", args)
+
+
+def _called(rest: str, attr: str) -> list[str]:
+    m = re.search(rf"{attr}=(%[\w.\-]+|\{{[^}}]*\}})", rest)
+    if not m:
+        return []
+    return re.findall(r"%([\w.\-]+)", m.group(1))
+
+
+def analyze_hlo_text(hlo: str) -> HloCost:
+    comps, entry = _parse(hlo)
+    memo: dict[str, HloCost] = {}
+
+    def comp_cost(name: str, depth: int = 0) -> HloCost:
+        if name in memo:
+            return memo[name]
+        cost = HloCost()
+        if depth > 128 or name not in comps:
+            memo[name] = cost
+            return cost
+        shapes: dict[str, list] = {}
+        seen_reads: set[str] = set()
+        for op in comps[name]:
+            res_shapes = _shape_list(op.type_str)
+            shapes[op.name] = res_shapes
+            res_b = _bytes(res_shapes)
+            res_n = _elems(res_shapes)
+            operand_b = sum(_bytes(shapes.get(o, [])) for o in _operands(op.rest))
+            # primary model reads each value once per computation execution
+            # (VMEM/register reuse within a loop body or fusion region)
+            fresh = [o for o in _operands(op.rest) if o not in seen_reads]
+            operand_b_dedup = sum(_bytes(shapes.get(o, [])) for o in fresh)
+
+            if op.kind == "while":
+                m = _TRIP_RE.search(op.rest)
+                trips = None
+                if m:
+                    trips = int(m.group(1))
+                else:
+                    conds = _called(op.rest, "condition")
+                    if conds and conds[0] in comps:
+                        trips = _trip_from_condition(comps[conds[0]])
+                if trips is None:
+                    trips = 1
+                    cost.dynamic_loops += 1
+                inner = HloCost()
+                for sub in _called(op.rest, "body") + _called(op.rest, "condition"):
+                    inner.add(comp_cost(sub, depth + 1))
+                cost.add(inner, mult=float(trips))
+                continue
+
+            if op.kind == "fusion":
+                for sub in _called(op.rest, "calls"):
+                    inner = comp_cost(sub, depth + 1)
+                    cost.flops += inner.flops
+                    cost.collective_bytes += inner.collective_bytes
+                    for k, v in inner.collective_by_kind.items():
+                        cost.collective_by_kind[k] = (
+                            cost.collective_by_kind.get(k, 0.0) + v
+                        )
+                    cost.dynamic_loops += inner.dynamic_loops
+                    cost.bytes += inner.bytes
+                    cost.bytes_upper += inner.bytes_upper
+                cost.bytes_upper += res_b + operand_b
+                continue
+
+            if op.kind in ("call", "custom-call", "map", "sort", "scatter",
+                           "reduce", "reduce-window", "select-and-scatter"):
+                for sub in (_called(op.rest, "calls") + _called(op.rest, "to_apply")):
+                    cost.add(comp_cost(sub, depth + 1))
+                cost.bytes_upper += res_b + operand_b
+                if op.kind in ("scatter", "sort"):
+                    cost.bytes += res_b + operand_b
+                if op.kind == "reduce":
+                    cost.flops += max(_elems([s for o in _operands(op.rest)
+                                              for s in shapes.get(o, [])]), res_n)
+                continue
+
+            if op.kind == "conditional":
+                branches = _called(op.rest, "branch_computations") or (
+                    _called(op.rest, "true_computation")
+                    + _called(op.rest, "false_computation")
+                )
+                if branches:
+                    worst = max(
+                        (comp_cost(b, depth + 1) for b in branches),
+                        key=lambda c: c.flops + c.bytes,
+                    )
+                    cost.add(worst)
+                cost.bytes_upper += res_b + operand_b
+                continue
+
+            coll = None
+            for c in _COLLECTIVES:
+                if op.kind in (c, f"{c}-start"):
+                    coll = c
+                    break
+            if coll:
+                size = operand_b if coll == "reduce-scatter" else (
+                    res_b if not op.kind.endswith("-start") else max(
+                        (_bytes([s]) for s in res_shapes), default=0
+                    )
+                )
+                cost.collective_bytes += size
+                cost.collective_by_kind[coll] = (
+                    cost.collective_by_kind.get(coll, 0.0) + size
+                )
+                cost.bytes += res_b
+                cost.bytes_upper += res_b
+                continue
+            if op.kind.endswith("-done") or op.kind in _FREE_OPS:
+                continue
+
+            if op.kind == "dot":
+                k = 1
+                mdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+                ops = _operands(op.rest)
+                if mdims and ops and ops[0] in shapes and shapes[ops[0]]:
+                    lhs_dims = shapes[ops[0]][0][1]
+                    for ci in mdims.group(1).split(","):
+                        if ci != "" and int(ci) < len(lhs_dims):
+                            k *= lhs_dims[int(ci)]
+                cost.flops += 2.0 * res_n * k
+                cost.bytes += res_b + operand_b_dedup
+                seen_reads.update(_operands(op.rest))
+                cost.bytes_upper += res_b + operand_b
+                continue
+
+            if op.kind == "convolution":
+                cost.flops += 2.0 * res_n  # frontends are stubbed; conv is rare
+                cost.bytes += res_b + operand_b_dedup
+                seen_reads.update(_operands(op.rest))
+                cost.bytes_upper += res_b + operand_b
+                continue
+
+            if op.kind == "dynamic-update-slice":
+                # in-place buffer update: only the *update* operand moves
+                # (the result aliases the input buffer — counting it would
+                # charge the whole KV cache / ys stack per loop iteration)
+                ops_ = _operands(op.rest)
+                upd_b = _bytes(shapes.get(ops_[1], [])) if len(ops_) > 1 else res_b
+                cost.bytes += upd_b
+            elif op.kind in ("dynamic-slice", "gather"):
+                # slab reads: the *slice* (= result) moves
+                cost.bytes += res_b
+            if op.kind in _ELEMENTWISE:
+                cost.flops += res_n
+            cost.bytes_upper += res_b + operand_b
+
+        memo[name] = cost
+        return cost
+
+    def _trip_from_condition(ops: list[_Op]):
+        const_val = None
+        has_lt = False
+        for op in ops:
+            m = re.search(r"constant\((\d+)\)", f"{op.kind}({op.rest}")
+            if op.kind == "constant":
+                m2 = re.search(r"^(\d+)", op.rest)
+                # constants print as  %c = s32[] constant(8)
+            if "direction=LT" in op.rest:
+                has_lt = True
+            mm = re.search(r"constant\((\d+)\)", op.rest)
+        # simpler: scan raw rest strings
+        for op in ops:
+            if op.kind == "constant":
+                mm = re.match(r"(\d+)\)", op.rest)
+                if mm:
+                    const_val = int(mm.group(1))
+        return const_val if has_lt and const_val is not None else None
+
+    if entry is None and comps:
+        entry = list(comps)[-1]
+    return comp_cost(entry) if entry else HloCost()

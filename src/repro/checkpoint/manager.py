@@ -1,0 +1,133 @@
+"""Fault-tolerant checkpointing.
+
+Design (scaled-down single-host version of the multi-host layout):
+  * one ``step_XXXXXXXX/`` directory per checkpoint:
+      - ``manifest.json``  — flat keypath → {shape, dtype, file} + metadata
+        (step, data-iterator state, mesh shape at save time)
+      - ``arrays.npz``     — one entry per leaf (multi-host would write one
+        file per host covering its addressable shards)
+      - ``_COMMITTED``     — atomic commit marker written *last*; restore
+        ignores uncommitted (crashed mid-write) checkpoints
+  * **async save**: the array→host transfer happens synchronously (cheap),
+    serialization runs on a background thread so the train loop continues.
+  * **elastic restore**: arrays are re-placed with ``jax.device_put`` against
+    the *current* mesh's shardings — a checkpoint written on N chips restores
+    onto M≠N chips (elastic scaling requirement).
+  * retention: keep the latest ``max_to_keep``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+__all__ = ["CheckpointManager"]
+
+
+def _flatten(tree):
+    flat = jax.tree.flatten_with_path(tree)[0]
+
+    def keystr(path):
+        return "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path
+        )
+
+    return {keystr(p): v for p, v in flat}
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, max_to_keep: int = 3):
+        self.dir = directory
+        self.max_to_keep = max_to_keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+
+    # -- save -------------------------------------------------------------------
+    def save(self, step: int, state, extra: dict | None = None,
+             blocking: bool = False):
+        self.wait()  # one in-flight save at a time
+        flat = _flatten(state)
+        host_arrays = {k: np.asarray(v) for k, v in flat.items()}
+
+        def write():
+            path = os.path.join(self.dir, f"step_{step:08d}")
+            tmp = path + ".tmp"
+            os.makedirs(tmp, exist_ok=True)
+            np.savez(os.path.join(tmp, "arrays.npz"), **host_arrays)
+            manifest = {
+                "step": step,
+                "extra": extra or {},
+                "leaves": {
+                    k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                    for k, v in host_arrays.items()
+                },
+            }
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            with open(os.path.join(tmp, "_COMMITTED"), "w") as f:
+                f.write("ok")
+            if os.path.exists(path):
+                shutil.rmtree(path)
+            os.rename(tmp, path)
+            self._cleanup()
+
+        if blocking:
+            write()
+        else:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _cleanup(self):
+        steps = self.all_steps()
+        for s in steps[: -self.max_to_keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"), ignore_errors=True)
+
+    # -- restore -----------------------------------------------------------------
+    def all_steps(self) -> list[int]:
+        out = []
+        for name in sorted(os.listdir(self.dir)):
+            full = os.path.join(self.dir, name)
+            if name.startswith("step_") and os.path.exists(
+                os.path.join(full, "_COMMITTED")
+            ):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, target, shardings=None):
+        """Rebuild ``target``-structured state; re-shard onto the current
+        mesh if ``shardings`` (same structure) is given."""
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        data = np.load(os.path.join(path, "arrays.npz"))
+        flat_t = _flatten(target)
+        flat_s = _flatten(shardings) if shardings is not None else {}
+        out = {}
+        for key, like in flat_t.items():
+            arr = data[key]
+            if shardings is not None:
+                out[key] = jax.device_put(arr, flat_s[key])
+            else:
+                out[key] = jax.numpy.asarray(arr)
+        # unflatten along target structure
+        leaves_paths = jax.tree.flatten_with_path(target)
+        treedef = jax.tree.structure(target)
+        keys = list(_flatten(target).keys())
+        return jax.tree.unflatten(treedef, [out[k] for k in keys])
+
+    def restore_manifest(self, step: int) -> dict:
+        path = os.path.join(self.dir, f"step_{step:08d}", "manifest.json")
+        with open(path) as f:
+            return json.load(f)

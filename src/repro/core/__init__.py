@@ -1,0 +1,28 @@
+"""TensorGalerkin core: Batch-Map + Sparse-Reduce Galerkin assembly.
+
+FEM numerics require double precision (the paper solves to 1e-10 residual);
+importing this subpackage enables jax x64 mode.  The LM/dry-run stack is
+dtype-explicit throughout and unaffected.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from .assembly import GalerkinAssembler, geometry_context, facet_context  # noqa: E402,F401
+from .boundary import DirichletCondenser, FacetAssembler  # noqa: E402,F401
+from .elements import ReferenceElement, get_element  # noqa: E402,F401
+from .mesh import (  # noqa: E402,F401
+    FunctionSpace,
+    Mesh,
+    annulus_sector_tri,
+    disk_tri,
+    hollow_cube_tet,
+    l_shape_tri,
+    rectangle_quad,
+    rectangle_tri,
+    unit_cube_tet,
+    unit_square_tri,
+)
+from .solvers import bicgstab, cg, jacobi_preconditioner, sparse_solve  # noqa: E402,F401
+from .sparse import CSR, ELL, csr_to_ell  # noqa: E402,F401

@@ -1,0 +1,147 @@
+"""Weak-form library consumed by the Batch-Map stage.
+
+Each form is a pure function ``form(ctx, **coeffs) -> K_local | F_local``
+implemented as dense tensor contractions over a :class:`FormContext` — the
+batched geometry tensors of Alg. 1 (Eq. 7 / Eq. A.12–A.14 of the paper).
+Everything is jax-traceable; coefficients may be traced arrays (TensorPILS /
+TensorOpt differentiate through them).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+
+__all__ = [
+    "FormContext",
+    "eval_coefficient",
+    "diffusion",
+    "mass",
+    "elasticity",
+    "load",
+    "vector_load",
+]
+
+
+@dataclasses.dataclass
+class FormContext:
+    """Batched geometry at quadrature points (the paper's 𝒢, 𝒥, 𝒳̂, Ŵ)."""
+
+    w: jnp.ndarray          # (Q,) reference weights
+    phi: jnp.ndarray        # (Q, k) basis values
+    detj: jnp.ndarray       # (E, Q) |det J| (surface measure for facets)
+    grad: jnp.ndarray | None  # (E, Q, k, d) physical basis gradients 𝒢
+    xq: jnp.ndarray         # (E, Q, d) physical quadrature points
+    scalar_cell_dofs: jnp.ndarray | None = None  # (E, k_scalar) for nodal coeffs
+
+    @property
+    def wdet(self) -> jnp.ndarray:
+        """(E, Q) combined quadrature × measure weights ŵ_q |det J|."""
+        return self.w[None, :] * self.detj
+
+
+def eval_coefficient(coef, ctx: FormContext, vector_size: int | None = None):
+    """Evaluate a coefficient at quadrature points → (E, Q) or (E, Q, c).
+
+    Accepted encodings:
+      * ``None``                → 1.0
+      * python/0-d scalar      → constant
+      * callable               → ``coef(xq)`` with ``xq: (E, Q, d)``
+      * array ``(E,)``         → element-wise constant (SIMP densities)
+      * array ``(E, Q)``       → per-quadrature values
+      * array ``(N_scalar,)``  → nodal field, interpolated with the basis
+      * array ``(c,)`` with ``vector_size == c`` → constant vector
+    """
+    e, q = ctx.detj.shape
+    if coef is None:
+        return jnp.ones((e, q))
+    if callable(coef):
+        out = coef(ctx.xq)
+        return jnp.asarray(out)
+    coef = jnp.asarray(coef)
+    if coef.ndim == 0:
+        return jnp.broadcast_to(coef, (e, q))
+    if vector_size is not None and coef.ndim == 1 and coef.shape[0] == vector_size:
+        return jnp.broadcast_to(coef[None, None, :], (e, q, vector_size))
+    if coef.ndim == 1 and coef.shape[0] == e:
+        return jnp.broadcast_to(coef[:, None], (e, q))
+    if coef.ndim == 1:
+        # nodal field: interpolate u_q = Σ_a φ_a(x̂_q) u_{g_e(a)}
+        assert ctx.scalar_cell_dofs is not None, "nodal coeff needs cell dofs"
+        nodal = coef[ctx.scalar_cell_dofs]                # (E, k)
+        return jnp.einsum("qa,ea->eq", ctx.phi, nodal)
+    if coef.shape[:2] == (e, q):
+        return coef
+    raise ValueError(f"un-interpretable coefficient shape {coef.shape}")
+
+
+# ---------------------------------------------------------------------------
+# Bilinear forms → (E, k, k)
+# ---------------------------------------------------------------------------
+
+def diffusion(ctx: FormContext, rho=None) -> jnp.ndarray:
+    """∫ ρ ∇φ_b · ∇φ_a  — Eq. (A.12), the paper's flagship contraction."""
+    rho_q = eval_coefficient(rho, ctx)
+    # single fused contraction: (K_local)_{eab} = Σ_q ŵ_q|detJ| ρ G_a·G_b
+    return jnp.einsum(
+        "eq,eq,eqai,eqbi->eab", ctx.wdet, rho_q, ctx.grad, ctx.grad,
+        optimize=True,
+    )
+
+
+def mass(ctx: FormContext, c=None) -> jnp.ndarray:
+    """∫ c φ_b φ_a  (also the Robin boundary form on facet contexts)."""
+    c_q = eval_coefficient(c, ctx)
+    return jnp.einsum("eq,eq,qa,qb->eab", ctx.wdet, c_q, ctx.phi, ctx.phi)
+
+
+def elasticity(ctx: FormContext, lam: float, mu: float, scale=None) -> jnp.ndarray:
+    """Isotropic linear elasticity ∫ σ(u):ε(v) with Lamé (λ, μ).
+
+    ``ctx.grad`` is the *scalar* basis gradient (E, Q, nv, d); the returned
+    local matrix is over interleaved vector dofs (a·d + i), matching
+    FunctionSpace ordering.  ``scale`` is an optional per-element factor —
+    the SIMP stiffness interpolation E(ρ) enters here (TensorOpt).
+    """
+    g = ctx.grad
+    e, q, nv, d = g.shape
+    s_q = eval_coefficient(scale, ctx)
+    w = ctx.wdet * s_q
+    t_lam = jnp.einsum("eq,eqai,eqbj->eaibj", w, g, g, optimize=True)
+    t_mu1 = jnp.einsum("eq,eqaj,eqbi->eaibj", w, g, g, optimize=True)
+    gdotg = jnp.einsum("eq,eqak,eqbk->eab", w, g, g, optimize=True)
+    eye = jnp.eye(d)
+    t_mu2 = jnp.einsum("eab,ij->eaibj", gdotg, eye)
+    k_local = lam * t_lam + mu * (t_mu1 + t_mu2)
+    return k_local.reshape(e, nv * d, nv * d)
+
+
+# ---------------------------------------------------------------------------
+# Linear forms → (E, k)
+# ---------------------------------------------------------------------------
+
+def load(ctx: FormContext, f=None) -> jnp.ndarray:
+    """∫ f φ_a — Eq. (A.11) (also the Neumann boundary load on facets)."""
+    f_q = eval_coefficient(f, ctx)
+    return jnp.einsum("eq,eq,qa->ea", ctx.wdet, f_q, ctx.phi)
+
+
+def vector_load(ctx: FormContext, f, d: int) -> jnp.ndarray:
+    """∫ f · v for vector-valued v; ``f`` is a constant (d,) vector, a
+    callable returning (E, Q, d), or an (E, Q, d) array."""
+    f_q = eval_coefficient(f, ctx, vector_size=d)     # (E, Q, d)
+    e, q, nv = ctx.detj.shape[0], ctx.detj.shape[1], ctx.phi.shape[1]
+    out = jnp.einsum("eq,eqi,qa->eai", ctx.wdet, f_q, ctx.phi)
+    return out.reshape(e, nv * d)
+
+
+def nonlinear_reaction(ctx: FormContext, u_nodal, fn: Callable) -> jnp.ndarray:
+    """Semi-linear load ∫ fn(u) φ_a (Allen–Cahn reaction, Eq. A.1's 𝒩).
+
+    ``u_nodal`` is the current coefficient vector; ``fn`` acts pointwise on
+    quadrature values of u.
+    """
+    u_q = eval_coefficient(u_nodal, ctx)
+    return jnp.einsum("eq,eq,qa->ea", ctx.wdet, fn(u_q), ctx.phi)

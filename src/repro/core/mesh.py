@@ -1,0 +1,366 @@
+"""Mesh containers and structured generators (numpy, setup-time).
+
+No external mesh dependency (Gmsh-free): the paper's benchmark geometries —
+unit square/cube, hollow cube, L-shape, disk, non-convex "boomerang" — are
+generated structurally.  A :class:`Mesh` stores vertices + cells; a
+:class:`FunctionSpace` derives the DoF layout (``cell_dofs: (E, k)`` — the
+local→global map ``g_e`` of the paper) for a chosen reference element.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .elements import ReferenceElement, get_element
+
+__all__ = [
+    "Mesh",
+    "FunctionSpace",
+    "unit_square_tri",
+    "rectangle_tri",
+    "rectangle_quad",
+    "unit_cube_tet",
+    "hollow_cube_tet",
+    "l_shape_tri",
+    "disk_tri",
+    "annulus_sector_tri",
+]
+
+
+# ---------------------------------------------------------------------------
+# Mesh container
+# ---------------------------------------------------------------------------
+
+_FACET_LOCAL = {
+    # local vertex indices of each facet, per cell type
+    "tri": np.array([[0, 1], [1, 2], [2, 0]]),
+    "quad": np.array([[0, 1], [1, 2], [2, 3], [3, 0]]),
+    "tet": np.array([[1, 2, 3], [0, 3, 2], [0, 1, 3], [0, 2, 1]]),
+}
+
+
+@dataclasses.dataclass
+class Mesh:
+    points: np.ndarray          # (n_vertices, d)
+    cells: np.ndarray           # (E, verts_per_cell), int
+    cell_type: str              # 'tri' | 'quad' | 'tet'
+
+    def __post_init__(self):
+        self.points = np.asarray(self.points, dtype=np.float64)
+        self.cells = np.asarray(self.cells, dtype=np.int64)
+
+    @property
+    def dim(self) -> int:
+        return self.points.shape[1]
+
+    @property
+    def num_vertices(self) -> int:
+        return self.points.shape[0]
+
+    @property
+    def num_cells(self) -> int:
+        return self.cells.shape[0]
+
+    # -- topology -----------------------------------------------------------
+    def boundary_facets(self) -> np.ndarray:
+        """Facets (as sorted vertex tuples) that appear in exactly one cell.
+
+        Returns ``(F, nv)`` vertex indices with *consistent outward
+        orientation* preserved from the generating cell.
+        """
+        loc = _FACET_LOCAL[self.cell_type]
+        facets = self.cells[:, loc]                      # (E, nf, nv)
+        flat = facets.reshape(-1, loc.shape[1])          # (E*nf, nv)
+        key = np.sort(flat, axis=1)
+        _, inv, counts = np.unique(
+            key, axis=0, return_inverse=True, return_counts=True
+        )
+        is_bdry = counts[inv] == 1
+        return flat[is_bdry]
+
+    def cell_volumes(self) -> np.ndarray:
+        x = self.points[self.cells]
+        if self.cell_type == "tri":
+            a = x[:, 1] - x[:, 0]
+            b = x[:, 2] - x[:, 0]
+            return 0.5 * np.abs(a[:, 0] * b[:, 1] - a[:, 1] * b[:, 0])
+        if self.cell_type == "tet":
+            a = x[:, 1] - x[:, 0]
+            b = x[:, 2] - x[:, 0]
+            c = x[:, 3] - x[:, 0]
+            return np.abs(np.einsum("ei,ei->e", a, np.cross(b, c))) / 6.0
+        if self.cell_type == "quad":
+            a = x[:, 1] - x[:, 0]
+            b = x[:, 3] - x[:, 0]
+            return np.abs(a[:, 0] * b[:, 1] - a[:, 1] * b[:, 0])
+        raise ValueError(self.cell_type)
+
+
+# ---------------------------------------------------------------------------
+# Function spaces (DoF layouts)
+# ---------------------------------------------------------------------------
+
+def _edge_numbering(cells: np.ndarray, edge_local: np.ndarray):
+    """Globally number unique edges; returns (n_edges, cell_edges (E, ne))."""
+    edges = cells[:, edge_local]                      # (E, ne, 2)
+    flat = np.sort(edges.reshape(-1, 2), axis=1)
+    uniq, inv = np.unique(flat, axis=0, return_inverse=True)
+    return uniq, inv.reshape(cells.shape[0], edge_local.shape[0])
+
+
+@dataclasses.dataclass
+class FunctionSpace:
+    """Scalar Lagrange space on a mesh.
+
+    Vector-valued problems (elasticity) use the same scalar space with
+    ``value_size`` components; global DoF = ``node * value_size + comp``.
+    """
+
+    mesh: Mesh
+    element: ReferenceElement
+    value_size: int = 1
+
+    def __post_init__(self):
+        m, el = self.mesh, self.element
+        if el.name in ("P1_tri", "P1_tet", "Q1_quad", "Q1_hex"):
+            self.scalar_dofs = m.num_vertices
+            scalar_cell_dofs = m.cells
+            self.dof_points = m.points
+        elif el.name == "P2_tri":
+            edge_local = np.array([[0, 1], [1, 2], [2, 0]])
+            uniq_edges, cell_edges = _edge_numbering(m.cells, edge_local)
+            self.scalar_dofs = m.num_vertices + uniq_edges.shape[0]
+            scalar_cell_dofs = np.concatenate(
+                [m.cells, m.num_vertices + cell_edges], axis=1
+            )
+            mid = 0.5 * (m.points[uniq_edges[:, 0]] + m.points[uniq_edges[:, 1]])
+            self.dof_points = np.concatenate([m.points, mid], axis=0)
+        else:
+            raise NotImplementedError(el.name)
+
+        v = self.value_size
+        if v == 1:
+            self.cell_dofs = scalar_cell_dofs
+        else:
+            # interleaved components: dof = scalar_dof * v + comp
+            base = scalar_cell_dofs[:, :, None] * v + np.arange(v)[None, None, :]
+            self.cell_dofs = base.reshape(m.num_cells, -1)
+        self.num_dofs = self.scalar_dofs * v
+        self.local_dofs = self.cell_dofs.shape[1]
+
+    # -- boundary DoFs --------------------------------------------------------
+    def boundary_dofs(self, predicate=None) -> np.ndarray:
+        """Scalar boundary DoFs (vertex + P2 edge DoFs) filtered by predicate
+        on DoF coordinates; expanded across components for vector spaces."""
+        facets = self.mesh.boundary_facets()
+        verts = np.unique(facets)
+        dofs = [verts]
+        if self.element.name == "P2_tri":
+            edge_local = np.array([[0, 1], [1, 2], [2, 0]])
+            uniq_edges, _ = _edge_numbering(self.mesh.cells, edge_local)
+            fkey = {tuple(sorted(f)) for f in facets}
+            on_b = np.array(
+                [i for i, e in enumerate(uniq_edges) if tuple(sorted(e)) in fkey],
+                dtype=np.int64,
+            )
+            dofs.append(self.mesh.num_vertices + on_b)
+        scalar = np.unique(np.concatenate(dofs))
+        if predicate is not None:
+            scalar = scalar[predicate(self.dof_points[scalar])]
+        if self.value_size == 1:
+            return scalar
+        return (scalar[:, None] * self.value_size + np.arange(self.value_size)).ravel()
+
+
+# ---------------------------------------------------------------------------
+# Generators
+# ---------------------------------------------------------------------------
+
+def rectangle_tri(nx: int, ny: int, lx: float = 1.0, ly: float = 1.0) -> Mesh:
+    """Structured crossed triangulation of [0,lx]x[0,ly]."""
+    xs = np.linspace(0.0, lx, nx + 1)
+    ys = np.linspace(0.0, ly, ny + 1)
+    X, Y = np.meshgrid(xs, ys, indexing="ij")
+    pts = np.stack([X.ravel(), Y.ravel()], axis=-1)
+
+    def vid(i, j):
+        return i * (ny + 1) + j
+
+    cells = []
+    for i in range(nx):
+        for j in range(ny):
+            v00, v10 = vid(i, j), vid(i + 1, j)
+            v01, v11 = vid(i, j + 1), vid(i + 1, j + 1)
+            if (i + j) % 2 == 0:
+                cells.append([v00, v10, v11])
+                cells.append([v00, v11, v01])
+            else:
+                cells.append([v00, v10, v01])
+                cells.append([v10, v11, v01])
+    return Mesh(pts, np.array(cells), "tri")
+
+
+def unit_square_tri(n: int) -> Mesh:
+    return rectangle_tri(n, n)
+
+
+def rectangle_quad(nx: int, ny: int, lx: float, ly: float) -> Mesh:
+    xs = np.linspace(0.0, lx, nx + 1)
+    ys = np.linspace(0.0, ly, ny + 1)
+    X, Y = np.meshgrid(xs, ys, indexing="ij")
+    pts = np.stack([X.ravel(), Y.ravel()], axis=-1)
+
+    def vid(i, j):
+        return i * (ny + 1) + j
+
+    cells = []
+    for i in range(nx):
+        for j in range(ny):
+            cells.append([vid(i, j), vid(i + 1, j), vid(i + 1, j + 1), vid(i, j + 1)])
+    return Mesh(pts, np.array(cells), "quad")
+
+
+_CUBE_TETS = np.array(
+    # 6-tet (Kuhn) subdivision of the unit cube, corners in lexicographic
+    # order (x fastest): vertex id = 4*z + 2*y + x  -> see _cube_vid below.
+    [
+        [0, 1, 3, 7],
+        [0, 1, 7, 5],
+        [0, 5, 7, 4],
+        [0, 3, 2, 7],
+        [0, 2, 6, 7],
+        [0, 6, 4, 7],
+    ]
+)
+
+
+def _box_tet(ni, nj, nk, keep=None, lx=1.0, ly=1.0, lz=1.0) -> Mesh:
+    xs = np.linspace(0, lx, ni + 1)
+    ys = np.linspace(0, ly, nj + 1)
+    zs = np.linspace(0, lz, nk + 1)
+    X, Y, Z = np.meshgrid(xs, ys, zs, indexing="ij")
+    pts = np.stack([X.ravel(), Y.ravel(), Z.ravel()], axis=-1)
+
+    def vid(i, j, k):
+        return (i * (nj + 1) + j) * (nk + 1) + k
+
+    cells = []
+    for i in range(ni):
+        for j in range(nj):
+            for k in range(nk):
+                if keep is not None and not keep(i, j, k):
+                    continue
+                c = [
+                    vid(i, j, k), vid(i + 1, j, k), vid(i, j + 1, k),
+                    vid(i + 1, j + 1, k), vid(i, j, k + 1), vid(i + 1, j, k + 1),
+                    vid(i, j + 1, k + 1), vid(i + 1, j + 1, k + 1),
+                ]
+                corners = np.array(c)
+                for tet in _CUBE_TETS:
+                    cells.append(corners[tet])
+    cells = np.array(cells)
+    # drop unused vertices (hollow meshes)
+    used = np.unique(cells)
+    remap = -np.ones(pts.shape[0], dtype=np.int64)
+    remap[used] = np.arange(used.shape[0])
+    return Mesh(pts[used], remap[cells], "tet")
+
+
+def unit_cube_tet(n: int) -> Mesh:
+    return _box_tet(n, n, n)
+
+
+def hollow_cube_tet(n: int) -> Mesh:
+    """[0,1]^3 minus the open box (0.25, 0.75)^3 (paper SM B.1.1)."""
+    lo = int(round(0.25 * n))
+    hi = int(round(0.75 * n))
+
+    def keep(i, j, k):
+        return not (lo <= i < hi and lo <= j < hi and lo <= k < hi)
+
+    return _box_tet(n, n, n, keep=keep)
+
+
+def l_shape_tri(n: int) -> Mesh:
+    """L-shaped domain [0,1]^2 minus (0.5,1)x(0.5,1)."""
+    m = rectangle_tri(n, n)
+    cx = m.points[m.cells].mean(axis=1)
+    keep = ~((cx[:, 0] > 0.5) & (cx[:, 1] > 0.5))
+    cells = m.cells[keep]
+    used = np.unique(cells)
+    remap = -np.ones(m.num_vertices, dtype=np.int64)
+    remap[used] = np.arange(used.shape[0])
+    return Mesh(m.points[used], remap[cells], "tri")
+
+
+def disk_tri(n_r: int, center=(0.5, 0.5), radius: float = 0.5) -> Mesh:
+    """Structured polar triangulation of a disk (paper's circular domain)."""
+    pts = [np.array(center, dtype=np.float64)]
+    rings = []
+    for r_i in range(1, n_r + 1):
+        r = radius * r_i / n_r
+        n_theta = 6 * r_i
+        th = 2 * np.pi * np.arange(n_theta) / n_theta
+        ring = np.stack(
+            [center[0] + r * np.cos(th), center[1] + r * np.sin(th)], axis=-1
+        )
+        rings.append((len(pts), n_theta))
+        pts.extend(ring)
+    pts = np.asarray(pts)
+
+    cells = []
+    # innermost ring to center
+    start, n_t = rings[0]
+    for t in range(n_t):
+        cells.append([0, start + t, start + (t + 1) % n_t])
+    # ring-to-ring strips
+    for ri in range(1, n_r):
+        s0, n0 = rings[ri - 1]
+        s1, n1 = rings[ri]
+        # walk around matching angles
+        for t in range(n1):
+            a1 = s1 + t
+            b1 = s1 + (t + 1) % n1
+            # nearest inner vertex by angle
+            t0 = int(round(t * n0 / n1)) % n0
+            t0n = int(round((t + 1) * n0 / n1)) % n0
+            a0 = s0 + t0
+            b0 = s0 + t0n
+            cells.append([a0, a1, b1])
+            if t0 != t0n:
+                cells.append([a0, b1, b0])
+    return Mesh(pts, np.array(cells), "tri")
+
+
+def annulus_sector_tri(
+    n_r: int, n_t: int, r0: float = 0.4, r1: float = 1.0, angle: float = 1.5 * np.pi
+) -> Mesh:
+    """Non-convex 'boomerang'-style domain: a 270° annulus sector."""
+    rr = np.linspace(r0, r1, n_r + 1)
+    tt = np.linspace(0.0, angle, n_t + 1)
+    R, T = np.meshgrid(rr, tt, indexing="ij")
+    pts = np.stack([R.ravel() * np.cos(T.ravel()), R.ravel() * np.sin(T.ravel())], -1)
+
+    def vid(i, j):
+        return i * (n_t + 1) + j
+
+    cells = []
+    for i in range(n_r):
+        for j in range(n_t):
+            v00, v10 = vid(i, j), vid(i + 1, j)
+            v01, v11 = vid(i, j + 1), vid(i + 1, j + 1)
+            cells.append([v00, v10, v11])
+            cells.append([v00, v11, v01])
+    return Mesh(pts, np.array(cells), "tri")
+
+
+def element_for_mesh(mesh: Mesh, degree: int = 1) -> ReferenceElement:
+    if mesh.cell_type == "tri":
+        return get_element("P1_tri" if degree == 1 else "P2_tri")
+    if mesh.cell_type == "tet":
+        return get_element("P1_tet")
+    if mesh.cell_type == "quad":
+        return get_element("Q1_quad")
+    raise ValueError(mesh.cell_type)

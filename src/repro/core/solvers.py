@@ -1,0 +1,156 @@
+"""Iterative sparse solvers + the differentiable solve (paper Eq. 11).
+
+* :func:`cg`, :func:`bicgstab` — preconditioned Krylov solvers as
+  ``lax.while_loop`` (O(1) trace size; matches the paper's solver setup:
+  BiCGSTAB + Jacobi, tol 1e-10, maxiter 10k — SM Table B.1).
+* :func:`sparse_solve` — ``jax.custom_vjp``: the backward pass solves the
+  adjoint system ``Kᵀλ = ḡ`` with the *same* solver and emits the **sparse**
+  cotangent ``∂/∂vals = −λ[rows]·U[cols]`` (only at stored nnz positions) and
+  ``∂/∂F = λ``.  This is the TORCH-SLA trick: O(1) extra graph nodes per
+  optimization iteration instead of O(iters × DoFs) from unrolling.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .sparse import CSR
+
+__all__ = ["cg", "bicgstab", "jacobi_preconditioner", "sparse_solve", "SolveInfo"]
+
+
+class SolveInfo(NamedTuple):
+    iters: jnp.ndarray
+    residual: jnp.ndarray
+
+
+def jacobi_preconditioner(a: CSR) -> Callable:
+    d = a.diagonal()
+    inv = jnp.where(jnp.abs(d) > 0, 1.0 / d, 1.0)
+    return lambda x: inv * x
+
+
+def _identity(x):
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Conjugate gradients (SPD systems: Poisson, elasticity)
+# ---------------------------------------------------------------------------
+
+def cg(matvec, b, x0=None, *, tol=1e-10, atol=1e-10, maxiter=10000, m=_identity):
+    x0 = jnp.zeros_like(b) if x0 is None else x0
+    bnorm = jnp.linalg.norm(b)
+    target = jnp.maximum(tol * bnorm, atol)
+
+    r0 = b - matvec(x0)
+    z0 = m(r0)
+    state = (x0, r0, z0, z0, jnp.vdot(r0, z0), jnp.array(0))
+
+    def cond(s):
+        _, r, *_, it = s
+        return (jnp.linalg.norm(r) > target) & (it < maxiter)
+
+    def body(s):
+        x, r, z, p, rz, it = s
+        ap = matvec(p)
+        alpha = rz / jnp.vdot(p, ap)
+        x = x + alpha * p
+        r = r - alpha * ap
+        z = m(r)
+        rz_new = jnp.vdot(r, z)
+        beta = rz_new / rz
+        p = z + beta * p
+        return (x, r, z, p, rz_new, it + 1)
+
+    x, r, *_, it = jax.lax.while_loop(cond, body, state)
+    return x, SolveInfo(it, jnp.linalg.norm(r))
+
+
+# ---------------------------------------------------------------------------
+# BiCGSTAB (general systems; the paper's default — van der Vorst 1992)
+# ---------------------------------------------------------------------------
+
+def bicgstab(matvec, b, x0=None, *, tol=1e-10, atol=1e-10, maxiter=10000, m=_identity):
+    x0 = jnp.zeros_like(b) if x0 is None else x0
+    bnorm = jnp.linalg.norm(b)
+    target = jnp.maximum(tol * bnorm, atol)
+
+    r0 = b - matvec(x0)
+    rhat = r0
+    state = (
+        x0, r0,
+        jnp.ones((), b.dtype), jnp.ones((), b.dtype), jnp.ones((), b.dtype),
+        jnp.zeros_like(b), jnp.zeros_like(b),
+        jnp.array(0),
+    )
+
+    def cond(s):
+        _, r, *_, it = s
+        return (jnp.linalg.norm(r) > target) & (it < maxiter)
+
+    def body(s):
+        x, r, rho, alpha, omega, v, p, it = s
+        rho_new = jnp.vdot(rhat, r)
+        beta = (rho_new / jnp.where(rho == 0, 1e-30, rho)) * (
+            alpha / jnp.where(omega == 0, 1e-30, omega)
+        )
+        p = r + beta * (p - omega * v)
+        phat = m(p)
+        v = matvec(phat)
+        denom = jnp.vdot(rhat, v)
+        alpha = rho_new / jnp.where(denom == 0, 1e-30, denom)
+        s_vec = r - alpha * v
+        shat = m(s_vec)
+        t = matvec(shat)
+        tt = jnp.vdot(t, t)
+        omega = jnp.vdot(t, s_vec) / jnp.where(tt == 0, 1e-30, tt)
+        x = x + alpha * phat + omega * shat
+        r = s_vec - omega * t
+        return (x, r, rho_new, alpha, omega, v, p, it + 1)
+
+    x, r, *_, it = jax.lax.while_loop(cond, body, state)
+    return x, SolveInfo(it, jnp.linalg.norm(r))
+
+
+_METHODS = {"cg": cg, "bicgstab": bicgstab}
+
+
+# ---------------------------------------------------------------------------
+# Differentiable sparse solve (TORCH-SLA analogue)
+# ---------------------------------------------------------------------------
+
+def _solve_impl(a: CSR, b, method, tol, atol, maxiter, precond, transpose=False):
+    matvec = a.rmatvec if transpose else a.matvec
+    m = jacobi_preconditioner(a) if precond == "jacobi" else _identity
+    x, _ = _METHODS[method](matvec, b, tol=tol, atol=atol, maxiter=maxiter, m=m)
+    return x
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6))
+def sparse_solve(a: CSR, b, method="bicgstab", tol=1e-10, atol=1e-10,
+                 maxiter=10000, precond="jacobi"):
+    """x = A⁻¹ b, differentiable w.r.t. ``a.vals`` and ``b`` via the adjoint."""
+    return _solve_impl(a, b, method, tol, atol, maxiter, precond)
+
+
+def _solve_fwd(a, b, method, tol, atol, maxiter, precond):
+    x = _solve_impl(a, b, method, tol, atol, maxiter, precond)
+    return x, (a, x)
+
+
+def _solve_bwd(method, tol, atol, maxiter, precond, res, g):
+    a, x = res
+    # adjoint: Kᵀ λ = ḡ   (Eq. 11; sign handled by the chain rule caller)
+    lam = _solve_impl(a, g, method, tol, atol, maxiter, precond, transpose=True)
+    # ∂L/∂vals = −λ_r · x_c at each stored (r, c) — never densified
+    dvals = -lam[jnp.asarray(a.row_of_nnz)] * x[jnp.asarray(a.indices)]
+    da = CSR(dvals, a.indptr, a.indices, a.row_of_nnz, a.shape, a.diag_pos)
+    return (da, lam)
+
+
+sparse_solve.defvjp(_solve_fwd, _solve_bwd)

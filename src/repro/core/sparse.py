@@ -1,0 +1,128 @@
+"""Sparse containers (CSR / ELL) as jax pytrees, with SpMV/SpMM.
+
+The CSR *pattern* (indptr/indices/row ids) is static numpy baked at setup —
+only ``vals`` is traced, preserving the paper's O(1)-graph property: the
+sparse operator participates in autodiff through a single dense value vector.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["CSR", "ELL", "csr_to_ell"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class CSR:
+    vals: jnp.ndarray            # (nnz,) traced
+    indptr: np.ndarray           # static
+    indices: np.ndarray          # static
+    row_of_nnz: np.ndarray       # static, (nnz,)
+    shape: tuple[int, int]       # static
+    diag_pos: np.ndarray | None = None  # static
+
+    # -- pytree ----------------------------------------------------------
+    def tree_flatten(self):
+        aux = (self.indptr, self.indices, self.row_of_nnz, self.shape, self.diag_pos)
+        return (self.vals,), aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        (vals,) = children
+        return cls(vals, *aux)
+
+    # -- ops ---------------------------------------------------------------
+    def matvec(self, x: jnp.ndarray) -> jnp.ndarray:
+        """y = A @ x via gather + sorted segment-sum (deterministic)."""
+        contrib = self.vals * x[self.indices]
+        return jax.ops.segment_sum(
+            contrib,
+            self.row_of_nnz,
+            num_segments=self.shape[0],
+            indices_are_sorted=True,
+        )
+
+    def rmatvec(self, x: jnp.ndarray) -> jnp.ndarray:
+        """y = A.T @ x (scatter over columns)."""
+        contrib = self.vals * x[self.row_of_nnz]
+        return jax.ops.segment_sum(
+            contrib, self.indices, num_segments=self.shape[1]
+        )
+
+    def matmat(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Y = A @ X for X (n, b) — batched multi-RHS SpMM."""
+        contrib = self.vals[:, None] * x[self.indices]
+        return jax.ops.segment_sum(
+            contrib,
+            self.row_of_nnz,
+            num_segments=self.shape[0],
+            indices_are_sorted=True,
+        )
+
+    def diagonal(self) -> jnp.ndarray:
+        assert self.diag_pos is not None, "diagonal positions not precomputed"
+        d = jnp.where(
+            jnp.asarray(self.diag_pos) >= 0,
+            self.vals[jnp.clip(jnp.asarray(self.diag_pos), 0)],
+            0.0,
+        )
+        return d
+
+    def to_dense(self) -> jnp.ndarray:
+        out = jnp.zeros(self.shape, dtype=self.vals.dtype)
+        return out.at[self.row_of_nnz, self.indices].set(self.vals)
+
+    def to_scipy(self):
+        import scipy.sparse as sp
+
+        return sp.csr_matrix(
+            (np.asarray(self.vals), np.asarray(self.indices), np.asarray(self.indptr)),
+            shape=self.shape,
+        )
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indices.shape[0])
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ELL:
+    """ELLPACK: fixed nnz-per-row padded format — the TPU-friendly layout
+    consumed by the Pallas SpMV kernel (bounded valence of FEM meshes)."""
+
+    vals: jnp.ndarray        # (n, L) traced, zero-padded
+    cols: np.ndarray         # (n, L) static, padded with row index (self-loop)
+    shape: tuple[int, int]
+
+    def tree_flatten(self):
+        return (self.vals,), (self.cols, self.shape)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        (vals,) = children
+        return cls(vals, *aux)
+
+    def matvec(self, x: jnp.ndarray) -> jnp.ndarray:
+        return jnp.sum(self.vals * x[jnp.asarray(self.cols)], axis=1)
+
+
+def csr_to_ell(csr: CSR) -> ELL:
+    n = csr.shape[0]
+    counts = np.diff(csr.indptr)
+    L = int(counts.max()) if counts.size else 1
+    cols = np.repeat(np.arange(n)[:, None], L, axis=1)  # pad with row idx
+    slot = np.concatenate([np.arange(c) for c in counts]) if counts.size else np.array([], np.int64)
+    rows_of = np.asarray(csr.row_of_nnz)
+    cols[rows_of, slot] = np.asarray(csr.indices)
+
+    # runtime scatter of vals into the padded layout (static slot map)
+    flat_pos = rows_of * L + slot
+    vals = jnp.zeros((n * L,), dtype=csr.vals.dtype).at[flat_pos].set(csr.vals)
+    return ELL(vals.reshape(n, L), cols, csr.shape)

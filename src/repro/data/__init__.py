@@ -1,0 +1,1 @@
+from .pipeline import SyntheticLMData  # noqa: F401

@@ -1,0 +1,5 @@
+from .tensormesh import (  # noqa: F401
+    ElasticityProblem,
+    MixedBCPoisson,
+    PoissonProblem,
+)

@@ -1,0 +1,1 @@
+from .ops import batch_map_stiffness, ell_matvec, ell_residual  # noqa: F401

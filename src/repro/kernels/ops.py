@@ -1,0 +1,40 @@
+"""Public jit'd wrappers for the Pallas kernels, with backend dispatch.
+
+``interpret=True`` (Python interpretation of the kernel body) is used on CPU
+for validation; on a real TPU backend the same ``pallas_call`` lowers to
+Mosaic.  The wrappers auto-select unless forced.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from .local_assembly import local_stiffness_p1
+from .spmv_ell import galerkin_residual_ell, spmv_ell
+
+__all__ = ["batch_map_stiffness", "ell_matvec", "ell_residual"]
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def batch_map_stiffness(coords, rho, *, interpret: bool | None = None):
+    """Stage-I Batch-Map for P1 simplices: (E,k,d),(E,) → (E,k,k)."""
+    itp = _interpret_default() if interpret is None else interpret
+    return local_stiffness_p1(coords, rho, interpret=itp)
+
+
+def ell_matvec(ell, x, *, interpret: bool | None = None):
+    """SpMV on a :class:`repro.core.sparse.ELL` operator."""
+    itp = _interpret_default() if interpret is None else interpret
+    import jax.numpy as jnp
+
+    return spmv_ell(ell.vals, jnp.asarray(ell.cols), x, interpret=itp)
+
+
+def ell_residual(ell, u, f, *, interpret: bool | None = None):
+    itp = _interpret_default() if interpret is None else interpret
+    import jax.numpy as jnp
+
+    return galerkin_residual_ell(ell.vals, jnp.asarray(ell.cols), u, f, interpret=itp)

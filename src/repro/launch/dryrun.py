@@ -1,0 +1,236 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+).strip()
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this:
+  1. builds the production mesh (16×16 single-pod or 2×16×16 multi-pod),
+  2. constructs ShapeDtypeStruct stand-ins for the train/serve step inputs
+     (params, optimizer state, batch, KV cache — zero allocation),
+  3. ``jax.jit(step, in_shardings=…).lower(...).compile()``,
+  4. records memory_analysis / cost_analysis / HLO-collective bytes into a
+     JSON row consumed by the §Roofline table and benchmarks.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+    python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
+
+Skip rules (recorded, not silently dropped):
+  * ``long_500k`` needs sub-quadratic attention → only ssm/hybrid run it;
+  * every skip lands in the JSON with its reason.
+"""
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from ..analysis.roofline import analyze_compiled  # noqa: E402
+from ..configs import ARCHS, SHAPES  # noqa: E402
+from ..configs.base import ArchConfig, ShapeSpec  # noqa: E402
+from ..models.layers import abstract_params  # noqa: E402
+from ..models.model_zoo import build_model  # noqa: E402
+from ..sharding.partitioning import (  # noqa: E402
+    RULES_MULTI_POD,
+    RULES_SINGLE_POD,
+    ShardingRules,
+    make_shardings,
+    use_rules,
+)
+from ..train.serve_step import serve_param_specs  # noqa: E402
+from ..train.train_step import make_train_state_specs, make_train_step  # noqa: E402
+from .mesh import make_production_mesh  # noqa: E402
+
+
+def should_skip(cfg: ArchConfig, shape: ShapeSpec) -> str | None:
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return "long_500k requires sub-quadratic attention (full-attn arch)"
+    return None
+
+
+def _abstract(tree_specs):
+    return abstract_params(tree_specs)
+
+
+def lower_cell(cfg: ArchConfig, shape: ShapeSpec, mesh, rules: ShardingRules,
+               extra_flags: dict | None = None):
+    """Returns (compiled, lowered, aux info dict)."""
+    model = build_model(cfg, tp_degree=mesh.shape.get("model", 1))
+    with mesh:
+        if shape.kind == "train":
+            state_specs = make_train_state_specs(cfg)
+            state_abs = _abstract(state_specs)
+            state_sh = make_shardings(state_specs, mesh, rules)
+            batch_abs = model.input_specs(shape)
+            batch_sh = make_shardings(model.batch_axes(shape), mesh, rules)
+            step = make_train_step(cfg, shape)
+
+            def fn(state, batch):
+                with use_rules(rules):
+                    return step(state, batch)
+
+            jitted = jax.jit(fn, in_shardings=(state_sh, batch_sh),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state_abs, batch_abs)
+        elif shape.kind == "prefill":
+            pspecs = serve_param_specs(cfg)
+            params_abs = _abstract(pspecs)
+            params_sh = make_shardings(pspecs, mesh, rules)
+            batch_abs = model.input_specs(shape)
+            batch_sh = make_shardings(model.batch_axes(shape), mesh, rules)
+
+            def fn(params, batch):
+                with use_rules(rules):
+                    return model.prefill(params, batch, shape.seq_len)
+
+            jitted = jax.jit(fn, in_shardings=(params_sh, batch_sh))
+            lowered = jitted.lower(params_abs, batch_abs)
+        else:  # decode
+            pspecs = serve_param_specs(cfg)
+            params_abs = _abstract(pspecs)
+            params_sh = make_shardings(pspecs, mesh, rules)
+            cspecs = model.cache_specs(shape.global_batch, shape.seq_len)
+            cache_abs = _abstract(cspecs)
+            cache_sh = make_shardings(cspecs, mesh, rules)
+            batch_abs = model.input_specs(shape)
+            batch_sh = make_shardings(model.batch_axes(shape), mesh, rules)
+
+            def fn(params, batch, cache):
+                with use_rules(rules):
+                    return model.decode(params, batch, cache)
+
+            jitted = jax.jit(fn, in_shardings=(params_sh, batch_sh, cache_sh),
+                             donate_argnums=(2,))
+            lowered = jitted.lower(params_abs, batch_abs, cache_abs)
+
+        compiled = lowered.compile()
+    return compiled, lowered
+
+
+def model_flops_for(cfg: ArchConfig, shape: ShapeSpec) -> float:
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def _effective_rules(rules: ShardingRules, shape: ShapeSpec, mesh) -> ShardingRules:
+    """Drop the batch mapping to replicated when the global batch doesn't
+    divide the batch mesh axes (e.g. long_500k's batch of 1)."""
+    bmap = rules.mapping.get("batch")
+    if bmap is not None:
+        axes = (bmap,) if isinstance(bmap, str) else tuple(bmap)
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        if shape.global_batch % size:
+            rules = ShardingRules({**rules.mapping, "batch": None})
+    return rules
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
+             rules: ShardingRules | None = None) -> dict:
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    skip = should_skip(cfg, shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    base = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+    if skip:
+        return {**base, "status": "skip", "reason": skip}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules or (RULES_MULTI_POD if multi_pod else RULES_SINGLE_POD)
+    rules = _effective_rules(rules, shape, mesh)
+    chips = int(np.prod(list(mesh.shape.values())))
+    t0 = time.perf_counter()
+    try:
+        compiled, lowered = lower_cell(cfg, shape, mesh, rules)
+    except Exception as e:
+        return {
+            **base, "status": "fail",
+            "error": f"{type(e).__name__}: {e}",
+            "trace": traceback.format_exc()[-2000:],
+        }
+    dt = time.perf_counter() - t0
+    report = analyze_compiled(
+        compiled, arch=arch, shape=shape_name, mesh_name=mesh_name,
+        chips=chips, model_flops=model_flops_for(cfg, shape),
+    )
+    row = report.row()
+    row.update(
+        status="ok",
+        compile_seconds=dt,
+        params=cfg.param_count(),
+        active_params=cfg.active_param_count(),
+    )
+    try:
+        ma = compiled.memory_analysis()
+        row["memory_analysis"] = {
+            "temp_GiB": getattr(ma, "temp_size_in_bytes", 0) / 2**30,
+            "arg_GiB": getattr(ma, "argument_size_in_bytes", 0) / 2**30,
+            "output_GiB": getattr(ma, "output_size_in_bytes", 0) / 2**30,
+            "alias_GiB": getattr(ma, "alias_size_in_bytes", 0) / 2**30,
+        }
+    except Exception:
+        pass
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="dryrun_results.json")
+    ap.add_argument("--append", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    archs = [args.arch] if args.arch else sorted(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                cells.append((a, s, mp))
+
+    rows = []
+    if args.append and os.path.exists(args.out):
+        rows = json.load(open(args.out))
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in rows}
+    for a, s, mp in cells:
+        mesh_name = "2x16x16" if mp else "16x16"
+        if (a, s, mesh_name) in done:
+            continue
+        row = run_cell(a, s, multi_pod=mp)
+        status = row["status"]
+        extra = (
+            f"compile={row.get('compile_seconds', 0):.1f}s "
+            f"bottleneck={row.get('bottleneck', '-')}"
+            if status == "ok"
+            else row.get("reason", row.get("error", ""))[:120]
+        )
+        print(f"[{status:4s}] {a:28s} {s:12s} {mesh_name:8s} {extra}", flush=True)
+        rows.append(row)
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1, default=str)
+    n_ok = sum(r["status"] == "ok" for r in rows)
+    n_skip = sum(r["status"] == "skip" for r in rows)
+    n_fail = sum(r["status"] == "fail" for r in rows)
+    print(f"done: {n_ok} ok / {n_skip} skip / {n_fail} fail → {args.out}")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,126 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+).strip()
+
+"""Perf-iteration harness (§Perf): re-lower a dry-run cell under a named
+optimization variant and diff the roofline terms against baseline.
+
+Variants are *declarative* — a rules patch + a config patch — so each
+hypothesis in EXPERIMENTS.md §Perf maps to one named entry here:
+
+  seqpar        sequence parallelism: shard the seq dim of activations over
+                'model' between blocks (Megatron-SP).  Hypothesis: cuts
+                residual-stream HBM traffic and converts boundary
+                all-reduces into RS/AG on 1/16-size shards.
+  bigchunk      flash-attention KV chunk 1024 → 4096: 4× fewer accumulator
+                round-trips (the dominant dus traffic in train cells).
+  seqpar+bigchunk  both.
+  seqcache      decode: shard the KV-cache *sequence* dim over 'model'
+                instead of replicating kv heads to TP (memory ÷TP for the
+                cache at the price of a logits all-gather).
+  dp_attn       attention runs data-parallel (heads replicated), MLP keeps
+                TP: removes the per-layer attention boundary collectives
+                (for small-d models where TP=16 over-shards attention).
+  gradbf16      bf16 gradient accumulation + all-reduce compression.
+  nomicro       halve grad-accum microbatches (×2 microbatch size).
+"""
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+
+from ..configs import ARCHS, SHAPES  # noqa: E402
+from ..sharding.partitioning import RULES_SINGLE_POD, ShardingRules  # noqa: E402
+from .dryrun import run_cell  # noqa: E402
+
+
+def _patched_rules(base: ShardingRules, patch: dict) -> ShardingRules:
+    return ShardingRules({**base.mapping, **patch})
+
+
+VARIANTS: dict = {
+    "baseline": (dict(), dict()),
+    "seqpar": ({"seq_act": "model"}, dict()),
+    "bigchunk": (dict(), {"attn_chunk": 4096}),
+    "seqpar+bigchunk": ({"seq_act": "model"}, {"attn_chunk": 4096}),
+    "hugechunk": (dict(), {"attn_chunk": 8192}),
+    "seqcache": ({"seq_cache": "model", "kv_cache": None}, dict()),
+    "dp_attn": ({"heads": None, "kv": None, "kv_cache": None}, dict()),
+    "gradbf16": (dict(), {"grad_dtype": "bfloat16"}),
+    "nomicro": (dict(), "HALVE_MICRO"),
+    "micro2": (dict(), "MICRO_2"),
+    "dp_attn+bigchunk": ({"heads": None, "kv": None, "kv_cache": None},
+                         {"attn_chunk": 4096}),
+    "ssmchunk512": (dict(), {"ssm_chunk": 512}),
+    "remat_dots": (dict(), {"remat_policy": "dots"}),
+    "remat_dots+bigchunk": (dict(), {"remat_policy": "dots", "attn_chunk": 4096}),
+    "ep_ffshard": ({"embed": None, "expert_mlp": "data"}, dict()),
+    "ep_ffshard+micro2": ({"embed": None, "expert_mlp": "data"}, "MICRO_2"),
+    "ssmchunk1024": (dict(), {"ssm_chunk": 1024}),
+}
+
+
+def run_variant(arch: str, shape: str, variant: str) -> dict:
+    rules_patch, cfg_patch = VARIANTS[variant]
+    cfg = ARCHS[arch]
+    if cfg_patch == "HALVE_MICRO":
+        mb = dict(cfg.microbatches)
+        if shape in mb and mb[shape] > 1:
+            mb[shape] = mb[shape] // 2
+        cfg_patch = {"microbatches": mb}
+    elif cfg_patch == "MICRO_2":
+        cfg_patch = {"microbatches": {**dict(cfg.microbatches), shape: 2}}
+    if cfg_patch == "MICRO_2":  # possible when combined patches use the tag
+        cfg_patch = {"microbatches": {**dict(cfg.microbatches), shape: 2}}
+    if cfg_patch:
+        cfg = dataclasses.replace(cfg, **cfg_patch)
+    rules = _patched_rules(RULES_SINGLE_POD, rules_patch)
+    # run through the dryrun cell runner with the patched config snapshot
+    saved = ARCHS[arch]
+    ARCHS[arch] = cfg
+    try:
+        row = run_cell(arch, shape, multi_pod=False, rules=rules)
+    finally:
+        ARCHS[arch] = saved
+    row["variant"] = variant
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variants", default="baseline")
+    ap.add_argument("--out", default="perf_results.json")
+    args = ap.parse_args()
+
+    rows = []
+    if os.path.exists(args.out):
+        rows = json.load(open(args.out))
+    for v in args.variants.split(","):
+        row = run_variant(args.arch, args.shape, v)
+        ok = row["status"] == "ok"
+        print(
+            f"[{row['status']}] {args.arch} {args.shape} {v:18s} "
+            + (
+                f"comp={row['t_compute_s']:.3g} mem={row['t_memory_s']:.3g} "
+                f"coll={row['t_collective_s']:.3g} bneck={row['bottleneck']} "
+                f"frac={row['roofline_fraction']:.4f}"
+                if ok
+                else row.get("error", "")[:160]
+            ),
+            flush=True,
+        )
+        rows = [
+            r for r in rows
+            if not (r["arch"] == args.arch and r["shape"] == args.shape
+                    and r.get("variant") == v)
+        ]
+        rows.append(row)
+        json.dump(rows, open(args.out, "w"), indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

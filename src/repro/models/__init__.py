@@ -1,0 +1,9 @@
+"""LM architecture pool.  Lazy re-export to avoid an import cycle:
+``sharding.partitioning`` needs ``models.layers`` (the P-spec type) while
+model modules need ``sharding.partitioning`` (activation annotation)."""
+
+
+def build_model(*args, **kwargs):
+    from .model_zoo import build_model as _build
+
+    return _build(*args, **kwargs)

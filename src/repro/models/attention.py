@@ -1,0 +1,169 @@
+"""Attention: GQA + RoPE + optional qk-norm, with three execution paths:
+
+* :func:`flash_attention`   — blockwise online-softmax over KV chunks
+  (``lax.scan``): O(S·C) live memory instead of O(S²); used for train and
+  prefill (32k prefill would otherwise materialize S² logits).
+* :func:`decode_attention`  — one new token against a (possibly huge) KV
+  cache with a length mask; logits in f32.
+* KV-head replication: when TP degree exceeds ``num_kv_heads`` the cache is
+  stored with kv heads repeated to the TP degree so attention stays local to
+  each model shard (the classic serving layout; see DESIGN §4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .layers import P, rms_norm, rope
+
+__all__ = ["attention_specs", "attention_train", "attention_decode", "init_kv_cache_specs"]
+
+NEG_INF = -1e30
+
+
+def attention_specs(cfg) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    specs = {
+        "wq": P((d, h * hd), ("embed", "heads")),
+        "wk": P((d, kv * hd), ("embed", "kv")),
+        "wv": P((d, kv * hd), ("embed", "kv")),
+        "wo": P((h * hd, d), ("heads", "embed")),
+    }
+    if cfg.qk_norm:
+        specs["q_norm"] = P((hd,), (None,), init="ones")
+        specs["k_norm"] = P((hd,), (None,), init="ones")
+    return specs
+
+
+def _project_qkv(cfg, params, x, positions):
+    b, s, _ = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dn->bsn", x, params["wq"].astype(x.dtype)).reshape(b, s, h, hd)
+    k = jnp.einsum("bsd,dn->bsn", x, params["wk"].astype(x.dtype)).reshape(b, s, kv, hd)
+    v = jnp.einsum("bsd,dn->bsn", x, params["wv"].astype(x.dtype)).reshape(b, s, kv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def flash_attention(q, k, v, *, causal: bool, chunk: int, q_offset: int = 0):
+    """Online-softmax attention.  q (B,Sq,H,D); k/v (B,Skv,KV,D) with
+    H % KV == 0 (GQA).  Scans KV in chunks of ``chunk``; f32 accumulators."""
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, d)
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+
+    n_chunks = -(-skv // chunk)
+    pad = n_chunks * chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    k_chunks = k.reshape(b, n_chunks, chunk, kvh, d).transpose(1, 0, 2, 3, 4)
+    v_chunks = v.reshape(b, n_chunks, chunk, kvh, d).transpose(1, 0, 2, 3, 4)
+
+    q_pos = q_offset + jnp.arange(sq)
+
+    def body(carry, inputs):
+        acc, m_i, l_i = carry
+        idx, k_c, v_c = inputs
+        kv_pos = idx * chunk + jnp.arange(chunk)
+        logits = jnp.einsum(
+            "bskgd,bckd->bskgc", qg, k_c, preferred_element_type=jnp.float32
+        ) * scale                                              # (B,Sq,KV,G,C)
+        mask = kv_pos[None, :] <= q_pos[:, None] if causal else (
+            kv_pos[None, :] >= -1
+        )
+        valid = kv_pos < skv
+        mask = mask & valid[None, :]
+        logits = jnp.where(mask[None, :, None, None, :], logits, NEG_INF)
+        m_new = jnp.maximum(m_i, logits.max(axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        alpha = jnp.exp(m_i - m_new)
+        l_new = l_i * alpha + p.sum(axis=-1)
+        pv = jnp.einsum("bskgc,bckd->bskgd", p.astype(v_c.dtype), v_c,
+                        preferred_element_type=jnp.float32)
+        acc = acc * alpha[..., None] + pv
+        return (acc, m_new, l_new), None
+
+    acc0 = jnp.zeros((b, sq, kvh, g, d), jnp.float32)
+    m0 = jnp.full((b, sq, kvh, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, sq, kvh, g), jnp.float32)
+    (acc, m_f, l_f), _ = jax.lax.scan(
+        body, (acc0, m0, l0), (jnp.arange(n_chunks), k_chunks, v_chunks)
+    )
+    out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+    return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
+def attention_train(cfg, params, x, positions):
+    """Full training/prefill attention; returns (out, (k, v)) so prefill can
+    populate the cache."""
+    q, k, v = _project_qkv(cfg, params, x, positions)
+    out = flash_attention(q, k, v, causal=True, chunk=cfg.attn_chunk)
+    b, s, _, _ = out.shape
+    out = out.reshape(b, s, cfg.num_heads * cfg.head_dim)
+    return jnp.einsum("bsn,nd->bsd", out, params["wo"].astype(x.dtype)), (k, v)
+
+
+# ---------------------------------------------------------------------------
+# decode with KV cache
+# ---------------------------------------------------------------------------
+
+def init_kv_cache_specs(cfg, batch: int, max_len: int, kv_repeat: int = 1,
+                        dtype=jnp.bfloat16, tp_degree: int = 16):
+    """Cache layout (B, S_max, KV·repeat, D), logical axes
+    (batch, seq_cache, kv_cache, None).  When the (repeated) head count does
+    not divide the TP degree the head axis is left replicated (tiny models
+    like whisper-tiny) — pjit arguments require even shardings."""
+    kvh = cfg.num_kv_heads * kv_repeat
+    head_ax = "kv_cache" if kvh % tp_degree == 0 else None
+    shape = (batch, max_len, kvh, cfg.head_dim)
+    return {
+        "k": P(shape, ("batch", "seq_cache", head_ax, None), "zeros", dtype=dtype),
+        "v": P(shape, ("batch", "seq_cache", head_ax, None), "zeros", dtype=dtype),
+    }
+
+
+def attention_decode(cfg, params, x, cache_k, cache_v, cache_len, kv_repeat: int = 1):
+    """x: (B, 1, d); cache: (B, S, KV·rep, D) already containing ``cache_len``
+    valid positions.  Returns (out, new_k_entry, new_v_entry)."""
+    b = x.shape[0]
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    positions = jnp.full((b, 1), cache_len, dtype=jnp.int32)
+    q, k_new, v_new = _project_qkv(cfg, params, x, positions)
+    if kv_repeat > 1:
+        k_new = jnp.repeat(k_new, kv_repeat, axis=2)
+        v_new = jnp.repeat(v_new, kv_repeat, axis=2)
+    k_all = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k_new.astype(cache_k.dtype), cache_len, axis=1
+    )
+    v_all = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v_new.astype(cache_v.dtype), cache_len, axis=1
+    )
+    kvh_eff = kvh * kv_repeat
+    g = h // kvh_eff
+    qg = q.reshape(b, 1, kvh_eff, g, hd)
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    logits = jnp.einsum(
+        "bskgd,bckd->bskgc", qg, k_all.astype(q.dtype),
+        preferred_element_type=jnp.float32,
+    ) * scale                                               # (B,1,KV,G,S)
+    pos = jnp.arange(k_all.shape[1])
+    mask = pos[None, :] <= cache_len
+    logits = jnp.where(mask[:, None, None, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bskgc,bckd->bskgd", p.astype(v_all.dtype), v_all,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(b, 1, h * hd).astype(x.dtype)
+    out = jnp.einsum("bsn,nd->bsd", out, params["wo"].astype(x.dtype))
+    return out, k_all, v_all

@@ -1,0 +1,266 @@
+"""Whisper-style encoder-decoder (audio family).
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs()``
+supplies precomputed encoder frame embeddings (B, T_enc, d).  The encoder is
+bidirectional self-attention with fixed sinusoidal positions; the decoder is
+causal self-attention (RoPE — a documented deviation from Whisper's learned
+positions, keeping parameter shapes length-agnostic) + cross-attention to
+the encoder output.  Decode caches both the self-attn KV and the
+once-computed cross KV.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import attention as attn
+from .layers import P, mlp_apply, mlp_specs, rms_norm, stack_specs
+
+__all__ = [
+    "encdec_specs",
+    "encdec_loss",
+    "encdec_prefill",
+    "encdec_decode",
+    "encdec_cache_specs",
+    "ENC_FRAMES",
+]
+
+ENC_FRAMES = 1500  # whisper 30 s @ 50 Hz
+
+
+def _cross_specs(cfg) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    return {
+        "wq": P((d, h * hd), ("embed", "heads")),
+        "wk": P((d, kv * hd), ("embed", "kv")),
+        "wv": P((d, kv * hd), ("embed", "kv")),
+        "wo": P((h * hd, d), ("heads", "embed")),
+    }
+
+
+def encdec_specs(cfg) -> dict:
+    d = cfg.d_model
+    enc_block = {
+        "ln1": P((d,), (None,), "ones"),
+        "attn": attn.attention_specs(cfg),
+        "ln2": P((d,), (None,), "ones"),
+        "mlp": mlp_specs(d, cfg.d_ff, "gelu"),
+    }
+    dec_block = {
+        "ln1": P((d,), (None,), "ones"),
+        "attn": attn.attention_specs(cfg),
+        "lnx": P((d,), (None,), "ones"),
+        "cross": _cross_specs(cfg),
+        "ln2": P((d,), (None,), "ones"),
+        "mlp": mlp_specs(d, cfg.d_ff, "gelu"),
+    }
+    return {
+        "embed": P((cfg.padded_vocab, d), ("vocab", "embed"), scale=1.0),
+        "enc_blocks": stack_specs(enc_block, cfg.encoder_layers),
+        "enc_ln": P((d,), (None,), "ones"),
+        "dec_blocks": stack_specs(dec_block, cfg.num_layers),
+        "final_ln": P((d,), (None,), "ones"),
+        "unembed": P((d, cfg.padded_vocab), ("embed", "vocab")),
+    }
+
+
+def _sinusoidal(s, d, dtype):
+    pos = np.arange(s)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10000.0, 2 * dim / d)
+    table = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(table, dtype)
+
+
+def encode(cfg, params, frames):
+    """frames: (B, T_enc, d) precomputed embeddings (frontend stub)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = frames.astype(cdt) + _sinusoidal(frames.shape[1], cfg.d_model, cdt)[None]
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(x, blk):
+        h = rms_norm(x, blk["ln1"])
+        q, k, v = attn._project_qkv(cfg, blk["attn"], h, positions)
+        o = attn.flash_attention(q, k, v, causal=False, chunk=cfg.attn_chunk)
+        o = o.reshape(b, s, cfg.num_heads * cfg.head_dim)
+        x = x + jnp.einsum("bsn,nd->bsd", o, blk["attn"]["wo"].astype(cdt))
+        h = rms_norm(x, blk["ln2"])
+        return x + mlp_apply(blk["mlp"], h, "gelu"), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return rms_norm(x, params["enc_ln"])
+
+
+def _cross_attend(cfg, cp, x, enc_k, enc_v):
+    b, s, _ = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dn->bsn", x, cp["wq"].astype(x.dtype)).reshape(b, s, h, hd)
+    o = attn.flash_attention(q, enc_k, enc_v, causal=False, chunk=cfg.attn_chunk)
+    o = o.reshape(b, s, h * hd)
+    return jnp.einsum("bsn,nd->bsd", o, cp["wo"].astype(x.dtype))
+
+
+def _cross_kv(cfg, cp, enc_out):
+    b, t, _ = enc_out.shape
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    k = jnp.einsum("btd,dn->btn", enc_out, cp["wk"].astype(enc_out.dtype))
+    v = jnp.einsum("btd,dn->btn", enc_out, cp["wv"].astype(enc_out.dtype))
+    return k.reshape(b, t, kv, hd), v.reshape(b, t, kv, hd)
+
+
+def decode_stack_train(cfg, params, tokens, enc_out):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(x, blk):
+        h = rms_norm(x, blk["ln1"])
+        a, _ = attn.attention_train(cfg, blk["attn"], h, positions)
+        x = x + a
+        h = rms_norm(x, blk["lnx"])
+        enc_k, enc_v = _cross_kv(cfg, blk["cross"], enc_out)
+        x = x + _cross_attend(cfg, blk["cross"], h, enc_k, enc_v)
+        h = rms_norm(x, blk["ln2"])
+        return x + mlp_apply(blk["mlp"], h, "gelu"), None
+
+    if cfg.remat:
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat_policy == "dots"
+                  else jax.checkpoint_policies.nothing_saveable)
+        body = jax.checkpoint(body, policy=policy)
+    x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    x = rms_norm(x, params["final_ln"])
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x, params["unembed"].astype(cdt),
+        preferred_element_type=jnp.float32,
+    )
+    from .transformer import vocab_mask
+    mask = vocab_mask(cfg)
+    if mask is not None:
+        logits = logits + mask
+    return logits
+
+
+def encdec_loss(cfg, params, batch):
+    enc_out = encode(cfg, params, batch["audio_embeds"])
+    logits = decode_stack_train(cfg, params, batch["tokens"], enc_out)
+    labels = batch["labels"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    true = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - true)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def encdec_cache_specs(cfg, batch: int, max_len: int, tp_degree: int = 16):
+    from .transformer import kv_repeat_for
+    rep = kv_repeat_for(cfg, tp_degree)
+    self_kv = attn.init_kv_cache_specs(cfg, batch, max_len, rep, tp_degree=tp_degree)
+    kvh = cfg.num_kv_heads * rep
+    head_ax = "kv_cache" if kvh % tp_degree == 0 else None
+    cross = {
+        "k": P((batch, ENC_FRAMES, kvh, cfg.head_dim),
+               ("batch", None, head_ax, None), "zeros", dtype=jnp.bfloat16),
+        "v": P((batch, ENC_FRAMES, kvh, cfg.head_dim),
+               ("batch", None, head_ax, None), "zeros", dtype=jnp.bfloat16),
+    }
+    return stack_specs({"self": self_kv, "cross": cross}, cfg.num_layers)
+
+
+def encdec_prefill(cfg, params, batch, max_len: int, tp_degree: int = 16):
+    """Encode audio + run the decoder prompt, build both caches."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    enc_out = encode(cfg, params, batch["audio_embeds"])
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    from .transformer import kv_repeat_for
+    rep = kv_repeat_for(cfg, tp_degree)
+
+    def body(x, blk):
+        h = rms_norm(x, blk["ln1"])
+        a, (k, v) = attn.attention_train(cfg, blk["attn"], h, positions)
+        x = x + a
+        h = rms_norm(x, blk["lnx"])
+        ck, cv = _cross_kv(cfg, blk["cross"], enc_out)
+        x = x + _cross_attend(cfg, blk["cross"], h, ck, cv)
+        h = rms_norm(x, blk["ln2"])
+        x = x + mlp_apply(blk["mlp"], h, "gelu")
+        if rep > 1:
+            k = jnp.repeat(k, rep, axis=2)
+            v = jnp.repeat(v, rep, axis=2)
+            ck = jnp.repeat(ck, rep, axis=2)
+            cv = jnp.repeat(cv, rep, axis=2)
+        pad = max_len - k.shape[1]
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(jnp.bfloat16)
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(jnp.bfloat16)
+        cache = {
+            "self": {"k": k, "v": v},
+            "cross": {"k": ck.astype(jnp.bfloat16), "v": cv.astype(jnp.bfloat16)},
+        }
+        return x, cache
+
+    x, cache = jax.lax.scan(body, x, params["dec_blocks"])
+    x = rms_norm(x[:, -1:], params["final_ln"])
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x, params["unembed"].astype(cdt),
+        preferred_element_type=jnp.float32,
+    )
+    from .transformer import vocab_mask
+    mask = vocab_mask(cfg)
+    if mask is not None:
+        logits = logits + mask
+    return logits, cache
+
+
+def encdec_decode(cfg, params, batch, cache, tp_degree: int = 16):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    tokens = batch["tokens"]
+    cache_len = batch["cache_len"]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+    b = x.shape[0]
+    from .transformer import kv_repeat_for
+    rep = kv_repeat_for(cfg, tp_degree)
+    h_heads, hd = cfg.num_heads, cfg.head_dim
+
+    def body(x, inp):
+        blk, layer_cache = inp
+        h = rms_norm(x, blk["ln1"])
+        a, k_all, v_all = attn.attention_decode(
+            cfg, blk["attn"], h, layer_cache["self"]["k"],
+            layer_cache["self"]["v"], cache_len, rep,
+        )
+        x = x + a
+        h = rms_norm(x, blk["lnx"])
+        # cross attention against the fixed encoder KV (already repeated)
+        q = jnp.einsum("bsd,dn->bsn", h, blk["cross"]["wq"].astype(cdt)).reshape(
+            b, 1, h_heads, hd
+        )
+        o = attn.flash_attention(
+            q, layer_cache["cross"]["k"].astype(cdt),
+            layer_cache["cross"]["v"].astype(cdt),
+            causal=False, chunk=cfg.attn_chunk,
+        ).reshape(b, 1, h_heads * hd)
+        x = x + jnp.einsum("bsn,nd->bsd", o, blk["cross"]["wo"].astype(cdt))
+        h = rms_norm(x, blk["ln2"])
+        x = x + mlp_apply(blk["mlp"], h, "gelu")
+        return x, {"self": {"k": k_all, "v": v_all}, "cross": layer_cache["cross"]}
+
+    x, new_cache = jax.lax.scan(body, x, (params["dec_blocks"], cache))
+    x = rms_norm(x, params["final_ln"])
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x, params["unembed"].astype(cdt),
+        preferred_element_type=jnp.float32,
+    )
+    from .transformer import vocab_mask
+    mask = vocab_mask(cfg)
+    if mask is not None:
+        logits = logits + mask
+    return logits, new_cache

@@ -1,0 +1,275 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a single weight-*shared* attention
+block invoked every ``shared_attn_every`` layers, with per-invocation LoRA
+adapters on the attention projections (arXiv:2411.15242).
+
+Layer layout for L layers, period p: G = L // p groups of p Mamba2 blocks,
+each followed by one shared-attention invocation; the remaining L − G·p
+Mamba2 blocks form a tail.  Grouping keeps the scan homogeneous and — unlike
+a cond-in-scan formulation — allocates KV cache only for the G invocations
+(6× cache saving for the long_500k cell).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.partitioning import annotate
+from . import attention as attn
+from . import mamba2 as m2
+from .layers import P, mlp_apply, mlp_specs, rms_norm, stack_specs
+
+__all__ = [
+    "hybrid_specs",
+    "hybrid_forward",
+    "hybrid_loss",
+    "hybrid_prefill",
+    "hybrid_decode",
+    "hybrid_cache_specs",
+]
+
+
+def _layout(cfg):
+    p = cfg.shared_attn_every
+    groups = cfg.num_layers // p
+    tail = cfg.num_layers - groups * p
+    return groups, p, tail
+
+
+def _lora_specs(cfg) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    r = cfg.shared_attn_lora_rank
+    return {
+        "qa": P((d, r), ("embed", None), scale=1.0),
+        "qb": P((r, h * hd), (None, "heads"), "zeros"),
+        "ka": P((d, r), ("embed", None), scale=1.0),
+        "kb": P((r, kv * hd), (None, "kv"), "zeros"),
+        "va": P((d, r), ("embed", None), scale=1.0),
+        "vb": P((r, kv * hd), (None, "kv"), "zeros"),
+    }
+
+
+def hybrid_specs(cfg) -> dict:
+    groups, p, tail = _layout(cfg)
+    mamba = m2.mamba2_block_specs(cfg)
+    d = cfg.d_model
+    shared = {
+        "ln1": P((d,), (None,), "ones"),
+        "attn": attn.attention_specs(cfg),
+        "ln2": P((d,), (None,), "ones"),
+        "mlp": mlp_specs(d, cfg.d_ff, "swiglu"),
+    }
+    specs = {
+        "embed": P((cfg.padded_vocab, d), ("vocab", "embed"), scale=1.0),
+        "groups": stack_specs(stack_specs(mamba, p), groups),
+        "shared": shared,
+        "lora": stack_specs(_lora_specs(cfg), groups),
+        "final_ln": P((d,), (None,), "ones"),
+        "unembed": P((d, cfg.padded_vocab), ("embed", "vocab")),
+    }
+    if tail:
+        specs["tail"] = stack_specs(mamba, tail)
+    return specs
+
+
+def _shared_attn_train(cfg, shared, lora, x, positions):
+    """Shared block with LoRA deltas folded into the projections."""
+    h = rms_norm(x, shared["ln1"])
+    ap = dict(shared["attn"])
+    cdt = x.dtype
+    ap = {
+        **shared["attn"],
+        "wq": shared["attn"]["wq"] + (lora["qa"] @ lora["qb"]).astype(
+            shared["attn"]["wq"].dtype
+        ),
+        "wk": shared["attn"]["wk"] + (lora["ka"] @ lora["kb"]).astype(
+            shared["attn"]["wk"].dtype
+        ),
+        "wv": shared["attn"]["wv"] + (lora["va"] @ lora["vb"]).astype(
+            shared["attn"]["wv"].dtype
+        ),
+    }
+    a, kv = attn.attention_train(cfg, ap, h, positions)
+    x = x + a
+    h = rms_norm(x, shared["ln2"])
+    x = x + mlp_apply(shared["mlp"], h, "swiglu")
+    return x, ap, kv
+
+
+def _zero_m2_state(cfg, b):
+    d_in = cfg.ssm_expand * cfg.d_model
+    h = d_in // cfg.ssm_head_dim
+    conv_ch = d_in + 2 * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((b, cfg.ssm_conv - 1, conv_ch), jnp.float32),
+        "ssm": jnp.zeros((b, h, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+    }
+
+
+def hybrid_forward(cfg, params, batch):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    groups, p, tail = _layout(cfg)
+
+    def mamba_body(x, blk):
+        x = annotate(x, "batch", "seq_act", None)
+        x, _ = m2.mamba2_block(cfg, blk, x, _zero_m2_state(cfg, b))
+        return x, None
+
+    if cfg.remat:
+        _policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                   if cfg.remat_policy == "dots"
+                   else jax.checkpoint_policies.nothing_saveable)
+        mamba_body = jax.checkpoint(mamba_body, policy=_policy)
+
+    def group_body(x, inp):
+        grp, lora = inp
+        x, _ = jax.lax.scan(mamba_body, x, grp)
+        x, _, _ = _shared_attn_train(cfg, params["shared"], lora, x, positions)
+        return x, None
+
+    if cfg.remat:
+        group_body = jax.checkpoint(group_body, policy=_policy)
+    x, _ = jax.lax.scan(group_body, x, (params["groups"], params["lora"]))
+    if tail:
+        x, _ = jax.lax.scan(mamba_body, x, params["tail"])
+    x = rms_norm(x, params["final_ln"])
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x, params["unembed"].astype(cdt),
+        preferred_element_type=jnp.float32,
+    )
+    from .transformer import vocab_mask
+    mask = vocab_mask(cfg)
+    if mask is not None:
+        logits = logits + mask
+    return logits
+
+
+def hybrid_loss(cfg, params, batch):
+    logits = hybrid_forward(cfg, params, batch)
+    labels = batch["labels"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    true = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - true)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def hybrid_cache_specs(cfg, batch: int, max_len: int, tp_degree: int = 16):
+    groups, p, tail = _layout(cfg)
+    m_state = m2.mamba2_state_specs(cfg, batch)
+    from .transformer import kv_repeat_for
+    rep = kv_repeat_for(cfg, tp_degree)
+    kv = attn.init_kv_cache_specs(cfg, batch, max_len, rep, tp_degree=tp_degree)
+    specs = {
+        "mamba": stack_specs(stack_specs(m_state, p), groups),
+        "kv": stack_specs(kv, groups),
+    }
+    if tail:
+        specs["mamba_tail"] = stack_specs(m_state, tail)
+    return specs
+
+
+def hybrid_prefill(cfg, params, batch, max_len: int, tp_degree: int = 16):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    groups, p, tail = _layout(cfg)
+    from .transformer import kv_repeat_for
+    rep = kv_repeat_for(cfg, tp_degree)
+
+    def mamba_body(x, blk):
+        x, st = m2.mamba2_block(cfg, blk, x, _zero_m2_state(cfg, b))
+        return x, st
+
+    def group_body(x, inp):
+        grp, lora = inp
+        x, states = jax.lax.scan(mamba_body, x, grp)
+        x, ap, (k, v) = _shared_attn_train(cfg, params["shared"], lora, x, positions)
+        if rep > 1:
+            k = jnp.repeat(k, rep, axis=2)
+            v = jnp.repeat(v, rep, axis=2)
+        pad = max_len - k.shape[1]
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(jnp.bfloat16)
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(jnp.bfloat16)
+        return x, {"mamba": states, "kv": {"k": k, "v": v}}
+
+    x, caches = jax.lax.scan(group_body, x, (params["groups"], params["lora"]))
+    cache = {"mamba": caches["mamba"], "kv": caches["kv"]}
+    if tail:
+        x, tail_states = jax.lax.scan(mamba_body, x, params["tail"])
+        cache["mamba_tail"] = tail_states
+    x = rms_norm(x[:, -1:], params["final_ln"])
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x, params["unembed"].astype(cdt),
+        preferred_element_type=jnp.float32,
+    )
+    from .transformer import vocab_mask
+    mask = vocab_mask(cfg)
+    if mask is not None:
+        logits = logits + mask
+    return logits, cache
+
+
+def hybrid_decode(cfg, params, batch, cache, tp_degree: int = 16):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    tokens = batch["tokens"]
+    cache_len = batch["cache_len"]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+    groups, p, tail = _layout(cfg)
+    from .transformer import kv_repeat_for
+    rep = kv_repeat_for(cfg, tp_degree)
+
+    def mamba_body(x, inp):
+        blk, st = inp
+        x, st = m2.mamba2_decode_step(cfg, blk, x, st)
+        return x, st
+
+    def group_body(x, inp):
+        grp, lora, mstates, kvcache = inp
+        x, new_m = jax.lax.scan(mamba_body, x, (grp, mstates))
+        h = rms_norm(x, params["shared"]["ln1"])
+        ap = {
+            **params["shared"]["attn"],
+            "wq": params["shared"]["attn"]["wq"]
+            + (lora["qa"] @ lora["qb"]).astype(cdt),
+            "wk": params["shared"]["attn"]["wk"]
+            + (lora["ka"] @ lora["kb"]).astype(cdt),
+            "wv": params["shared"]["attn"]["wv"]
+            + (lora["va"] @ lora["vb"]).astype(cdt),
+        }
+        a, k_all, v_all = attn.attention_decode(
+            cfg, ap, h, kvcache["k"], kvcache["v"], cache_len, rep
+        )
+        x = x + a
+        h = rms_norm(x, params["shared"]["ln2"])
+        x = x + mlp_apply(params["shared"]["mlp"], h, "swiglu")
+        return x, {"mamba": new_m, "kv": {"k": k_all, "v": v_all}}
+
+    x, new_caches = jax.lax.scan(
+        group_body, x,
+        (params["groups"], params["lora"], cache["mamba"], cache["kv"]),
+    )
+    new_cache = {"mamba": new_caches["mamba"], "kv": new_caches["kv"]}
+    if tail:
+        x, new_tail = jax.lax.scan(
+            mamba_body, x, (params["tail"], cache["mamba_tail"])
+        )
+        new_cache["mamba_tail"] = new_tail
+    x = rms_norm(x, params["final_ln"])
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x, params["unembed"].astype(cdt),
+        preferred_element_type=jnp.float32,
+    )
+    from .transformer import vocab_mask
+    mask = vocab_mask(cfg)
+    if mask is not None:
+        logits = logits + mask
+    return logits, new_cache

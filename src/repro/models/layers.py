@@ -1,0 +1,140 @@
+"""Shared layers + the parameter-spec system.
+
+A model is described by a pytree of :class:`P` (shape, logical axes, init);
+from that single source of truth we derive real parameters (``init_params``),
+ShapeDtypeStructs (dry-run), and NamedShardings (``repro.sharding``).
+
+Logical axes used across the stack:
+  embed   — the model (residual) dimension            → fsdp axis
+  heads   — attention heads × head_dim (fused)        → tensor axis
+  kv      — kv heads × head_dim                       → tensor axis
+  mlp     — feed-forward hidden                       → tensor axis
+  vocab   — vocabulary                                → tensor axis
+  expert  — MoE expert                                → tensor axis (EP)
+  layers  — stacked-block leading axis                → unsharded (scanned)
+  (None)  — replicated
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["P", "init_params", "abstract_params", "RMSNorm helpers"]
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    """Parameter spec: shape + logical axes (+ init style)."""
+
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"          # normal | zeros | ones
+    scale: float = 1.0            # stddev multiplier (normal → scale/√fan_in)
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, P)
+
+
+def _leaf_init(key, spec: P):
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    fan_in = spec.shape[0] if len(spec.shape) > 1 else max(spec.shape[-1], 1)
+    if len(spec.shape) >= 2:
+        fan_in = spec.shape[-2]
+    std = spec.scale / np.sqrt(max(fan_in, 1))
+    return (std * jax.random.normal(key, spec.shape)).astype(spec.dtype)
+
+
+def init_params(specs, key):
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_leaf_init(k, s) for k, s in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(specs):
+    """ShapeDtypeStructs for lowering without allocation."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs, is_leaf=is_spec
+    )
+
+
+def param_axes(specs):
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=is_spec)
+
+
+def stack_specs(specs, n: int):
+    """Prepend a scanned 'layers' axis to every spec in a block."""
+    return jax.tree.map(
+        lambda s: P((n,) + s.shape, ("layers",) + s.axes, s.init, s.scale, s.dtype),
+        specs,
+        is_leaf=is_spec,
+    )
+
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(dt)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, H, D) with D even; positions: (B, S) or (S,)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freq      # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def mlp_specs(d_model: int, d_ff: int, kind: str) -> dict:
+    if kind == "swiglu":
+        return {
+            "wi": P((d_model, d_ff), ("embed", "mlp")),
+            "wg": P((d_model, d_ff), ("embed", "mlp")),
+            "wo": P((d_ff, d_model), ("mlp", "embed")),
+        }
+    return {  # squared_relu / gelu: 2-matrix MLP
+        "wi": P((d_model, d_ff), ("embed", "mlp")),
+        "wo": P((d_ff, d_model), ("mlp", "embed")),
+    }
+
+
+def mlp_apply(params: dict, x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    if kind == "swiglu":
+        h = jnp.einsum("bsd,df->bsf", x, params["wi"].astype(x.dtype))
+        g = jnp.einsum("bsd,df->bsf", x, params["wg"].astype(x.dtype))
+        h = jax.nn.silu(g) * h
+    else:
+        h = jnp.einsum("bsd,df->bsf", x, params["wi"].astype(x.dtype))
+        if kind == "squared_relu":                      # nemotron-4
+            h = jnp.square(jax.nn.relu(h))
+        else:
+            h = jax.nn.gelu(h)
+    return jnp.einsum("bsf,fd->bsd", h, params["wo"].astype(x.dtype))

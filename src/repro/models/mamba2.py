@@ -1,0 +1,158 @@
+"""Mamba2 (SSD — state-space duality) block, chunked.
+
+Per-head scalar decay a_t = exp(Δt·A) makes the chunked form simpler than
+RWKV6: the intra-chunk kernel exp(Λ_t − Λ_s) is materialized directly
+(s ≤ t ⇒ exponent ≤ 0, numerically safe at any chunk length).
+
+Recurrence (head h, state S ∈ R^{P×N}):
+    S_t = a_t S_{t−1} + (Δt_t x_t) ⊗ B_t ,   y_t = S_t · C_t + D x_t
+Decode carries (conv_state, ssm_state) exactly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import P, rms_norm
+
+__all__ = ["mamba2_block_specs", "mamba2_block", "mamba2_decode_step", "mamba2_state_specs"]
+
+
+def _dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    heads = d_in // cfg.ssm_head_dim
+    return d_in, heads, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def mamba2_block_specs(cfg) -> dict:
+    d = cfg.d_model
+    d_in, h, p, n = _dims(cfg)
+    conv_ch = d_in + 2 * n
+    return {
+        "ln": P((d,), (None,), "ones"),
+        "in_proj": P((d, 2 * d_in + 2 * n + h), ("embed", "mlp")),
+        "conv_w": P((cfg.ssm_conv, conv_ch), (None, "mlp"), scale=1.0),
+        "conv_b": P((conv_ch,), ("mlp",), "zeros"),
+        "a_log": P((h,), (None,), "ones"),
+        "dt_bias": P((h,), (None,), "zeros"),
+        "d_skip": P((h,), (None,), "ones"),
+        "out_norm": P((d_in,), ("mlp",), "ones"),
+        "out_proj": P((d_in, d), ("mlp", "embed")),
+    }
+
+
+def mamba2_state_specs(cfg, batch: int, dtype=jnp.float32) -> dict:
+    d_in, h, p, n = _dims(cfg)
+    conv_ch = d_in + 2 * n
+    return {
+        "conv": P((batch, cfg.ssm_conv - 1, conv_ch), ("batch", None, "mlp"),
+                  "zeros", dtype=dtype),
+        "ssm": P((batch, h, p, n), ("batch", None, None, None), "zeros", dtype=dtype),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv; x (B,S,C), w (K,C).  state (B,K-1,C) holds the
+    previous tail for decode/prefill continuity."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :].astype(x.dtype)
+        for i in range(k)
+    )
+    new_state = xp[:, -(k - 1):, :]
+    return jax.nn.silu(out + b.astype(x.dtype)), new_state
+
+
+def _ssd_chunked(x, dt, a_log, b_in, c_in, state, chunk: int):
+    """x (B,S,H,P); dt (B,S,H) (post-softplus); b_in/c_in (B,S,N);
+    state (B,H,P,N) f32.  Returns (y, new_state)."""
+    bsz, s, h, p = x.shape
+    n = b_in.shape[-1]
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_in = jnp.pad(b_in, ((0, 0), (0, pad), (0, 0)))
+        c_in = jnp.pad(c_in, ((0, 0), (0, pad), (0, 0)))
+
+    a = -jnp.exp(a_log.astype(jnp.float32))                    # (H,) negative
+    la = dt.astype(jnp.float32) * a[None, None, :]             # log decay (B,S,H)
+
+    def split(t, extra):
+        return t.reshape((bsz, nc, chunk) + extra).transpose(
+            (1, 0, 2) + tuple(range(3, 3 + len(extra)))
+        )
+
+    xc = split(x.astype(jnp.float32), (h, p))
+    dtc = split(dt.astype(jnp.float32), (h,))
+    lac = split(la, (h,))
+    bc = split(b_in.astype(jnp.float32), (n,))
+    cc = split(c_in.astype(jnp.float32), (n,))
+
+    def body(s_in, inp):
+        xk, dtk, lak, bk, ck = inp
+        lam = jnp.cumsum(lak, axis=1)                          # (B,C,H) inclusive
+        lam_last = lam[:, -1]                                  # (B,H)
+        # inter-chunk: y_t += exp(Λ_t) C_t · S_in
+        inter = jnp.einsum("bch,bcn,bhpn->bchp", jnp.exp(lam), ck, s_in)
+        # intra-chunk: kernel L_{t,s} = exp(Λ_t − Λ_s) for s ≤ t
+        diff = lam[:, :, None, :] - lam[:, None, :, :]         # (B,C,C,H)
+        idx = jnp.arange(xk.shape[1])
+        mask = idx[:, None] >= idx[None, :]
+        kern = jnp.exp(diff) * mask[None, :, :, None]
+        cb = jnp.einsum("bcn,bsn->bcs", ck, bk)                # (B,C,C)
+        w_s = dtk[:, :, :, None] * xk                          # Δt·x (B,C,H,P)
+        intra = jnp.einsum("bcs,bcsh,bshp->bchp",
+                           cb, kern.transpose(0, 1, 2, 3), w_s)
+        y = inter + intra
+        # state update: S_out = exp(Λ_last) S_in + Σ_s exp(Λ_last − Λ_s) w_s ⊗ B_s
+        decay_out = jnp.exp(lam_last[:, None, :] - lam)        # (B,C,H)
+        s_out = jnp.exp(lam_last)[..., None, None] * s_in + jnp.einsum(
+            "bch,bchp,bcn->bhpn", decay_out, w_s, bk
+        )
+        return s_out, y
+
+    state, ys = jax.lax.scan(body, state.astype(jnp.float32), (xc, dtc, lac, bc, cc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(bsz, nc * chunk, h, p)[:, :s]
+    return y, state
+
+
+def mamba2_block(cfg, params, x, state, chunk=None):
+    """x (B,S,d); state {conv, ssm}.  Returns (x, new_state)."""
+    chunk = chunk or cfg.ssm_chunk
+    d_in, h, p, n = _dims(cfg)
+    bsz, s, _ = x.shape
+    res = x
+    xh = rms_norm(x, params["ln"])
+    proj = jnp.einsum("bsd,dk->bsk", xh, params["in_proj"].astype(x.dtype))
+    z, xbc_dt = jnp.split(proj, [d_in], axis=-1)
+    xbc, dt_raw = jnp.split(xbc_dt, [d_in + 2 * n], axis=-1)
+    xbc, conv_state = _causal_conv(
+        xbc, params["conv_w"], params["conv_b"], state["conv"]
+    )
+    xs, b_in, c_in = jnp.split(xbc, [d_in, d_in + n], axis=-1)
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )
+    y, ssm_state = _ssd_chunked(
+        xs.reshape(bsz, s, h, p), dt, params["a_log"], b_in, c_in,
+        state["ssm"], chunk,
+    )
+    y = y + params["d_skip"].astype(jnp.float32)[None, None, :, None] * xs.reshape(
+        bsz, s, h, p
+    ).astype(jnp.float32)
+    y = y.reshape(bsz, s, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["out_norm"])
+    out = jnp.einsum("bsk,kd->bsd", y, params["out_proj"].astype(x.dtype))
+    return res + out, {"conv": conv_state.astype(state["conv"].dtype), "ssm": ssm_state}
+
+
+def mamba2_decode_step(cfg, params, x, state):
+    """Single-token exact recurrence; x (B,1,d)."""
+    out, new_state = mamba2_block(cfg, params, x, state, chunk=1)
+    return out, new_state

@@ -1,0 +1,124 @@
+"""Unified model API: every assigned architecture behind one interface.
+
+``build_model(cfg)`` returns a :class:`ModelAPI` with:
+  * ``param_specs()``                  — P-spec pytree (one source of truth)
+  * ``loss(params, batch)``            — training objective
+  * ``prefill(params, batch)``         — prompt → (last logits, cache)
+  * ``decode(params, batch, cache)``   — one token vs cache/state
+  * ``cache_specs(batch, max_len)``    — P-spec pytree for the cache
+  * ``input_specs(shape)``             — ShapeDtypeStructs for the dry-run
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeSpec
+from . import encdec, hybrid, transformer
+from .layers import abstract_params
+
+__all__ = ["ModelAPI", "build_model"]
+
+
+@dataclasses.dataclass
+class ModelAPI:
+    cfg: ArchConfig
+    tp_degree: int = 16
+
+    # -- parameters -----------------------------------------------------------
+    def param_specs(self):
+        fam = self.cfg.family
+        if fam == "hybrid":
+            return hybrid.hybrid_specs(self.cfg)
+        if fam == "audio":
+            return encdec.encdec_specs(self.cfg)
+        return transformer.decoder_specs(self.cfg)
+
+    def abstract_params(self):
+        return abstract_params(self.param_specs())
+
+    # -- training --------------------------------------------------------------
+    def loss(self, params, batch):
+        fam = self.cfg.family
+        if fam == "hybrid":
+            return hybrid.hybrid_loss(self.cfg, params, batch)
+        if fam == "audio":
+            return encdec.encdec_loss(self.cfg, params, batch)
+        return transformer.lm_loss(self.cfg, params, batch)
+
+    # -- serving ----------------------------------------------------------------
+    def cache_specs(self, batch: int, max_len: int):
+        fam = self.cfg.family
+        if fam == "hybrid":
+            return hybrid.hybrid_cache_specs(self.cfg, batch, max_len, self.tp_degree)
+        if fam == "audio":
+            return encdec.encdec_cache_specs(self.cfg, batch, max_len, self.tp_degree)
+        return transformer.decoder_cache_specs(self.cfg, batch, max_len, self.tp_degree)
+
+    def prefill(self, params, batch, max_len: int):
+        fam = self.cfg.family
+        if fam == "hybrid":
+            return hybrid.hybrid_prefill(self.cfg, params, batch, max_len, self.tp_degree)
+        if fam == "audio":
+            return encdec.encdec_prefill(self.cfg, params, batch, max_len, self.tp_degree)
+        return transformer.decoder_prefill(self.cfg, params, batch, max_len, self.tp_degree)
+
+    def decode(self, params, batch, cache):
+        fam = self.cfg.family
+        if fam == "hybrid":
+            return hybrid.hybrid_decode(self.cfg, params, batch, cache, self.tp_degree)
+        if fam == "audio":
+            return encdec.encdec_decode(self.cfg, params, batch, cache, self.tp_degree)
+        return transformer.decoder_decode(self.cfg, params, batch, cache, self.tp_degree)
+
+    # -- dry-run inputs -----------------------------------------------------------
+    def input_specs(self, shape: ShapeSpec) -> dict:
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        tok = lambda *sh: jax.ShapeDtypeStruct(sh, i32)
+        f32 = lambda *sh: jax.ShapeDtypeStruct(sh, jnp.float32)
+
+        if shape.kind == "train":
+            specs = {"tokens": tok(b, s), "labels": tok(b, s)}
+            if cfg.frontend == "patch_embed":
+                n = cfg.num_frontend_tokens
+                specs = {
+                    "tokens": tok(b, s - n),
+                    "labels": tok(b, s - n),
+                    "vision_embeds": f32(b, n, cfg.d_model),
+                }
+            elif cfg.frontend == "audio_frames":
+                specs["audio_embeds"] = f32(b, encdec.ENC_FRAMES, cfg.d_model)
+            return specs
+        if shape.kind == "prefill":
+            specs = {"tokens": tok(b, s)}
+            if cfg.frontend == "patch_embed":
+                n = cfg.num_frontend_tokens
+                specs = {"tokens": tok(b, s - n), "vision_embeds": f32(b, n, cfg.d_model)}
+            elif cfg.frontend == "audio_frames":
+                specs["audio_embeds"] = f32(b, encdec.ENC_FRAMES, cfg.d_model)
+            return specs
+        # decode: one new token against a seq_len cache
+        return {"tokens": tok(b, 1), "cache_len": jax.ShapeDtypeStruct((), i32)}
+
+    def batch_axes(self, shape: ShapeSpec) -> dict:
+        """Logical axes for each input (for in_shardings)."""
+        cfg = self.cfg
+        if shape.kind in ("train", "prefill"):
+            axes = {"tokens": ("batch", None)}
+            if shape.kind == "train":
+                axes["labels"] = ("batch", None)
+            if cfg.frontend == "patch_embed":
+                axes["vision_embeds"] = ("batch", None, None)
+            elif cfg.frontend == "audio_frames":
+                axes["audio_embeds"] = ("batch", None, None)
+            return axes
+        return {"tokens": ("batch", None), "cache_len": ()}
+
+
+def build_model(cfg: ArchConfig, tp_degree: int = 16) -> ModelAPI:
+    return ModelAPI(cfg, tp_degree)

@@ -1,0 +1,94 @@
+"""Mixture-of-Experts layer: top-k routing with capacity-based dispatch
+(GShard-style one-hot einsums — compiles to dense contractions that GSPMD
+partitions over the expert axis; see DESIGN §4).
+
+Tokens are grouped per-sample (G = batch, T = seq): routing and capacity are
+per group, so the dispatch tensor (G, T, E, C) shards as
+(batch→data, ·, expert→model, ·) and stays small per chip.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import P
+
+__all__ = ["moe_specs", "moe_apply"]
+
+
+def moe_specs(cfg) -> dict:
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    specs = {
+        "router": P((d, e), ("embed", None)),
+        # experts shard over 'model' (EP); their ff dim stays local
+        "wi": P((e, d, ff), ("expert", "embed", "expert_mlp")),
+        "wg": P((e, d, ff), ("expert", "embed", "expert_mlp")),
+        "wo": P((e, ff, d), ("expert", "expert_mlp", "embed")),
+    }
+    if cfg.moe_shared_expert:
+        specs["shared"] = {
+            "wi": P((d, ff), ("embed", "mlp")),
+            "wg": P((d, ff), ("embed", "mlp")),
+            "wo": P((ff, d), ("mlp", "embed")),
+        }
+    return specs
+
+
+def _capacity(cfg, tokens_per_group: int) -> int:
+    c = int(tokens_per_group * cfg.experts_per_token / cfg.num_experts
+            * cfg.moe_capacity_factor)
+    return max(c, cfg.experts_per_token)
+
+
+def moe_apply(cfg, params, x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) → (out, aux_loss).  B is the group axis."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    c = _capacity(cfg, s)
+
+    router_logits = jnp.einsum(
+        "gtd,de->gte", x.astype(jnp.float32), params["router"].astype(jnp.float32)
+    )
+    gates = jax.nn.softmax(router_logits, axis=-1)             # (G,T,E)
+
+    top_vals, top_idx = jax.lax.top_k(gates, k)                # (G,T,K)
+    top_vals = top_vals / jnp.maximum(top_vals.sum(-1, keepdims=True), 1e-9)
+
+    # --- position-in-expert via k-major cumulative count --------------------
+    onehot = jax.nn.one_hot(top_idx, e, dtype=jnp.float32)     # (G,T,K,E)
+    flat = onehot.transpose(0, 2, 1, 3).reshape(b, k * s, e)   # k-major (G,KT,E)
+    pos = jnp.cumsum(flat, axis=1) - flat                      # (G,KT,E)
+    pos_scalar = jnp.sum(pos * flat, axis=-1)                  # (G,KT)
+    keep = (pos_scalar < c).astype(jnp.float32)
+    slot_oh = jax.nn.one_hot(pos_scalar.astype(jnp.int32), c, dtype=jnp.float32)
+    # dispatch (G,KT,E,C), then fold k slots back onto tokens
+    dispatch_kt = flat[..., :, None] * slot_oh[..., None, :] * keep[..., None, None]
+    dispatch = dispatch_kt.reshape(b, k, s, e, c).sum(axis=1)  # (G,T,E,C)
+
+    weights_kt = top_vals.transpose(0, 2, 1).reshape(b, k * s) # k-major weights
+    combine_kt = dispatch_kt * weights_kt[..., None, None]
+    combine = combine_kt.reshape(b, k, s, e, c).sum(axis=1)    # (G,T,E,C)
+
+    # --- expert computation --------------------------------------------------
+    cd = x.dtype
+    expert_in = jnp.einsum("gtec,gtd->gecd", dispatch.astype(cd), x)   # (G,E,C,d)
+    h = jnp.einsum("gecd,edf->gecf", expert_in, params["wi"].astype(cd))
+    g = jnp.einsum("gecd,edf->gecf", expert_in, params["wg"].astype(cd))
+    h = jax.nn.silu(g) * h
+    expert_out = jnp.einsum("gecf,efd->gecd", h, params["wo"].astype(cd))
+    out = jnp.einsum("gtec,gecd->gtd", combine.astype(cd), expert_out)
+
+    if cfg.moe_shared_expert:
+        sh = params["shared"]
+        hh = jnp.einsum("gtd,df->gtf", x, sh["wi"].astype(cd))
+        gg = jnp.einsum("gtd,df->gtf", x, sh["wg"].astype(cd))
+        out = out + jnp.einsum(
+            "gtf,fd->gtd", jax.nn.silu(gg) * hh, sh["wo"].astype(cd)
+        )
+
+    # load-balancing auxiliary loss (Switch-style)
+    density = jnp.mean(onehot.sum(2), axis=1)                  # (G,E) token frac
+    prob_mean = jnp.mean(gates, axis=1)                        # (G,E)
+    aux = e * jnp.mean(jnp.sum(density * prob_mean, axis=-1))
+    return out, aux

@@ -1,0 +1,270 @@
+"""Decoder-only transformer assembly (dense / MoE / VLM / RWKV6 families).
+
+Blocks are *stacked* on a leading 'layers' axis and executed with
+``lax.scan`` (+ optional ``jax.checkpoint``): compile time and HLO size are
+O(1) in depth — the LM-side analogue of the paper's O(1)-graph property.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.partitioning import annotate
+from . import attention as attn
+from . import moe as moe_mod
+from . import rwkv6 as rwkv
+from .layers import P, mlp_apply, mlp_specs, rms_norm, stack_specs
+
+__all__ = [
+    "decoder_specs",
+    "decoder_forward",
+    "decoder_prefill",
+    "decoder_decode",
+    "lm_loss",
+]
+
+
+def _block_specs(cfg):
+    d = cfg.d_model
+    if cfg.family == "ssm":                       # rwkv6
+        return rwkv.rwkv6_block_specs(cfg)
+    block = {
+        "ln1": P((d,), (None,), "ones"),
+        "attn": attn.attention_specs(cfg),
+        "ln2": P((d,), (None,), "ones"),
+    }
+    if cfg.num_experts:
+        block["moe"] = moe_mod.moe_specs(cfg)
+    else:
+        block["mlp"] = mlp_specs(d, cfg.d_ff, cfg.mlp)
+    return block
+
+
+def vocab_mask(cfg):
+    """(padded_vocab,) additive mask: 0 on real tokens, −inf on padding."""
+    import numpy as np
+    pv = cfg.padded_vocab
+    if pv == cfg.vocab_size:
+        return None
+    return jnp.asarray(
+        np.where(np.arange(pv) < cfg.vocab_size, 0.0, -1e30), jnp.float32
+    )
+
+
+def decoder_specs(cfg) -> dict:
+    d, v = cfg.d_model, cfg.padded_vocab
+    specs = {
+        "embed": P((v, d), ("vocab", "embed"), scale=1.0),
+        "blocks": stack_specs(_block_specs(cfg), cfg.num_layers),
+        "final_ln": P((d,), (None,), "ones"),
+        "unembed": P((d, v), ("embed", "vocab")),
+    }
+    if cfg.frontend == "patch_embed":
+        # stubbed modality frontend: a single projection of precomputed
+        # patch embeddings into the residual stream
+        specs["patch_proj"] = P((d, d), ("embed", "heads"))
+    return specs
+
+
+def _embed_inputs(cfg, params, batch, compute_dtype):
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(compute_dtype)
+    if cfg.frontend == "patch_embed" and "vision_embeds" in batch:
+        ve = batch["vision_embeds"].astype(compute_dtype)
+        ve = jnp.einsum("bnd,dk->bnk", ve, params["patch_proj"].astype(compute_dtype))
+        x = jnp.concatenate([ve, x], axis=1)
+    return x
+
+
+def _dense_block(cfg, blk, x, positions):
+    x = annotate(x, "batch", "seq_act", None)
+    h = rms_norm(x, blk["ln1"])
+    a, _ = attn.attention_train(cfg, blk["attn"], h, positions)
+    x = x + a
+    x = annotate(x, "batch", "seq_act", None)
+    h = rms_norm(x, blk["ln2"])
+    if cfg.num_experts:
+        m, aux = moe_mod.moe_apply(cfg, blk["moe"], h)
+    else:
+        m, aux = mlp_apply(blk["mlp"], h, cfg.mlp), 0.0
+    return x + m, aux
+
+
+def decoder_forward(cfg, params, batch):
+    """Full causal forward → logits (B, S, vocab) in f32 (+ moe aux loss)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = _embed_inputs(cfg, params, batch, cdt)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    if cfg.family == "ssm":
+        def body(carry, blk):
+            x = carry
+            state = _zero_rwkv_state(cfg, b, cdt)
+            x, _ = rwkv.rwkv6_block(cfg, blk, x, state)
+            return x, jnp.zeros((), jnp.float32)
+    else:
+        def body(carry, blk):
+            x = carry
+            x, aux = _dense_block(cfg, blk, x, positions)
+            return x, jnp.asarray(aux, jnp.float32)
+
+    if cfg.remat:
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat_policy == "dots"
+                  else jax.checkpoint_policies.nothing_saveable)
+        body = jax.checkpoint(body, policy=policy)
+    x, auxs = jax.lax.scan(body, x, params["blocks"])
+    x = rms_norm(x, params["final_ln"])
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x, params["unembed"].astype(cdt),
+        preferred_element_type=jnp.float32,
+    )
+    mask = vocab_mask(cfg)
+    if mask is not None:
+        logits = logits + mask
+    return logits, jnp.sum(auxs)
+
+
+def _zero_rwkv_state(cfg, b, dtype):
+    h = cfg.d_model // cfg.ssm_head_dim
+    hd = cfg.ssm_head_dim
+    return {
+        "wkv": jnp.zeros((b, h, hd, hd), jnp.float32),
+        "shift": jnp.zeros((b, cfg.d_model), dtype),
+        "shift_c": jnp.zeros((b, cfg.d_model), dtype),
+    }
+
+
+def lm_loss(cfg, params, batch):
+    logits, aux = decoder_forward(cfg, params, batch)
+    labels = batch["labels"]
+    if cfg.frontend == "patch_embed" and "vision_embeds" in batch:
+        # loss only over text positions (vision prefix predicts nothing)
+        n_img = batch["vision_embeds"].shape[1]
+        logits = logits[:, n_img:]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    true = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = jnp.mean(lse - true)
+    if cfg.num_experts:
+        nll = nll + 0.01 * aux
+    return nll
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def kv_repeat_for(cfg, tp_degree: int = 16) -> int:
+    """Replicate kv heads toward the TP degree, bounded by the GQA group
+    size (kv·rep must still divide q heads)."""
+    kvh, h = cfg.num_kv_heads, cfg.num_heads
+    if not kvh or kvh >= tp_degree:
+        return 1
+    rep = min(tp_degree // kvh, h // kvh)
+    while rep > 1 and (h % (kvh * rep) or tp_degree % (kvh * rep)):
+        rep -= 1
+    return max(rep, 1)
+
+
+def decoder_cache_specs(cfg, batch: int, max_len: int, tp_degree: int = 16):
+    if cfg.family == "ssm":
+        per_layer = rwkv.rwkv6_state_specs(cfg, batch)
+        # stack along layers
+        return stack_specs(per_layer, cfg.num_layers)
+    rep = kv_repeat_for(cfg, tp_degree)
+    per_layer = attn.init_kv_cache_specs(cfg, batch, max_len, rep, tp_degree=tp_degree)
+    return stack_specs(per_layer, cfg.num_layers)
+
+
+def decoder_prefill(cfg, params, batch, max_len: int, tp_degree: int = 16):
+    """Run the full prompt, return (last-token logits, populated cache)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = _embed_inputs(cfg, params, batch, cdt)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    if cfg.family == "ssm":
+        def body(x, blk):
+            state = _zero_rwkv_state(cfg, b, cdt)
+            x, new_state = rwkv.rwkv6_block(cfg, blk, x, state)
+            return x, new_state
+    else:
+        rep = kv_repeat_for(cfg, tp_degree)
+
+        def body(x, blk):
+            x = annotate(x, "batch", "seq_act", None)
+            h = rms_norm(x, blk["ln1"])
+            a, (k, v) = attn.attention_train(cfg, blk["attn"], h, positions)
+            x = x + a
+            h = rms_norm(x, blk["ln2"])
+            if cfg.num_experts:
+                m, _ = moe_mod.moe_apply(cfg, blk["moe"], h)
+            else:
+                m = mlp_apply(blk["mlp"], h, cfg.mlp)
+            x = x + m
+            if rep > 1:
+                k = jnp.repeat(k, rep, axis=2)
+                v = jnp.repeat(v, rep, axis=2)
+            pad = max_len - k.shape[1]
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(jnp.bfloat16)
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(jnp.bfloat16)
+            k = annotate(k, "batch", "seq_cache", "kv_cache", None)
+            v = annotate(v, "batch", "seq_cache", "kv_cache", None)
+            return x, {"k": k, "v": v}
+
+    x, cache = jax.lax.scan(body, x, params["blocks"])
+    x = rms_norm(x[:, -1:], params["final_ln"])
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x, params["unembed"].astype(cdt),
+        preferred_element_type=jnp.float32,
+    )
+    mask = vocab_mask(cfg)
+    if mask is not None:
+        logits = logits + mask
+    return logits, cache
+
+
+def decoder_decode(cfg, params, batch, cache, tp_degree: int = 16):
+    """One decode step: batch = {tokens (B,1), cache_len ()} → (logits, cache)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+    cache_len = batch["cache_len"]
+
+    if cfg.family == "ssm":
+        def body(x, inp):
+            blk, state = inp
+            x, new_state = rwkv.rwkv6_decode_step(cfg, blk, x, state)
+            return x, new_state
+    else:
+        rep = kv_repeat_for(cfg, tp_degree)
+
+        def body(x, inp):
+            blk, layer_cache = inp
+            h = rms_norm(x, blk["ln1"])
+            a, k_all, v_all = attn.attention_decode(
+                cfg, blk["attn"], h, layer_cache["k"], layer_cache["v"],
+                cache_len, rep,
+            )
+            x = x + a
+            h = rms_norm(x, blk["ln2"])
+            if cfg.num_experts:
+                m, _ = moe_mod.moe_apply(cfg, blk["moe"], h)
+            else:
+                m = mlp_apply(blk["mlp"], h, cfg.mlp)
+            return x + m, {"k": k_all, "v": v_all}
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    x = rms_norm(x, params["final_ln"])
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x, params["unembed"].astype(cdt),
+        preferred_element_type=jnp.float32,
+    )
+    mask = vocab_mask(cfg)
+    if mask is not None:
+        logits = logits + mask
+    return logits, new_cache

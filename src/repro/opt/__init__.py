@@ -1,0 +1,2 @@
+from .simp import CantileverProblem, oc_update, sensitivity_filter  # noqa: F401
+from .mma import mma_update, MMAState  # noqa: F401

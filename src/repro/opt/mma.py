@@ -1,0 +1,90 @@
+"""Compact Method of Moving Asymptotes (Svanberg 1987) — single constraint.
+
+The paper optimizes with MMA (§B.4.1).  This is the standard MMA
+approximation with adaptive asymptotes and a dual bisection for the single
+volume constraint; adequate for compliance minimization (monotone negative
+objective sensitivities).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["MMAState", "mma_update"]
+
+
+@dataclasses.dataclass
+class MMAState:
+    low: jnp.ndarray
+    upp: jnp.ndarray
+    x_prev1: jnp.ndarray | None = None
+    x_prev2: jnp.ndarray | None = None
+
+
+def mma_update(x, dfdx, g_constraint, dgdx, state: MMAState,
+               move=0.1, x_min=1e-3, x_max=1.0,
+               asy_init=0.5, asy_incr=1.2, asy_decr=0.7):
+    """One MMA iteration for min f(x) s.t. g(x) ≤ 0, x∈[x_min, x_max].
+
+    dfdx: objective sensitivity (≤0 for compliance); dgdx: constraint
+    sensitivity (constant 1/n for mean-volume).  Returns (x_new, state).
+    """
+    n = x.shape[0]
+    rng = x_max - x_min
+
+    # asymptote update
+    if state.x_prev1 is None or state.x_prev2 is None:
+        low = x - asy_init * rng
+        upp = x + asy_init * rng
+    else:
+        osc = (x - state.x_prev1) * (state.x_prev1 - state.x_prev2)
+        factor = jnp.where(osc > 0, asy_incr, jnp.where(osc < 0, asy_decr, 1.0))
+        low = x - factor * (state.x_prev1 - state.low)
+        upp = x + factor * (state.upp - state.x_prev1)
+        low = jnp.clip(low, x - 10 * rng, x - 0.01 * rng)
+        upp = jnp.clip(upp, x + 0.01 * rng, x + 10 * rng)
+
+    alpha = jnp.maximum(x_min, jnp.maximum(low + 0.1 * (x - low), x - move * rng))
+    beta = jnp.minimum(x_max, jnp.minimum(upp - 0.1 * (upp - x), x + move * rng))
+
+    # MMA approximation coefficients: f ≈ Σ p/(upp−x) + q/(x−low)
+    df_pos = jnp.maximum(dfdx, 0.0)
+    df_neg = jnp.maximum(-dfdx, 0.0)
+    p0 = (upp - x) ** 2 * (1.001 * df_pos + 0.001 * df_neg + 1e-5 / rng)
+    q0 = (x - low) ** 2 * (0.001 * df_pos + 1.001 * df_neg + 1e-5 / rng)
+    dg_pos = jnp.maximum(dgdx, 0.0)
+    dg_neg = jnp.maximum(-dgdx, 0.0)
+    p1 = (upp - x) ** 2 * dg_pos
+    q1 = (x - low) ** 2 * dg_neg
+    # constant so the approximate constraint matches g at x
+    r1 = g_constraint - jnp.sum(p1 / (upp - x) + q1 / (x - low))
+
+    def x_of_lambda(lam):
+        p = p0 + lam * p1
+        q = q0 + lam * q1
+        # stationary point of p/(upp−x)+q/(x−low): x* = (low√p + upp√q)/(√p+√q)
+        sp, sq = jnp.sqrt(p), jnp.sqrt(q)
+        xs = (low * sp + upp * sq) / (sp + sq + 1e-30)
+        return jnp.clip(xs, alpha, beta)
+
+    def g_of_lambda(lam):
+        xs = x_of_lambda(lam)
+        return r1 + jnp.sum(p1 / (upp - xs) + q1 / (xs - low))
+
+    # dual bisection on λ ≥ 0
+    def body(_, bounds):
+        l1, l2 = bounds
+        lmid = 0.5 * (l1 + l2)
+        viol = g_of_lambda(lmid) > 0
+        return jnp.where(viol, lmid, l1), jnp.where(viol, l2, lmid)
+
+    l1, l2 = jax.lax.fori_loop(
+        0, 80, body, (jnp.asarray(0.0), jnp.asarray(1e6))
+    )
+    x_new = x_of_lambda(0.5 * (l1 + l2))
+
+    new_state = MMAState(low=low, upp=upp, x_prev1=x, x_prev2=state.x_prev1)
+    return x_new, new_state

@@ -1,0 +1,6 @@
+from .optimizers import (  # noqa: F401
+    adafactor_init_specs,
+    adamw_init_specs,
+    make_optimizer,
+    cosine_schedule,
+)

@@ -1,0 +1,150 @@
+"""Optimizers for the LM stack: AdamW + Adafactor (factored second moment).
+
+State is described with the same P-spec system as parameters, so optimizer
+state inherits the parameter sharding (fully-sharded states — ZeRO):
+  * AdamW:     m, v  — same shape/axes as the parameter.
+  * Adafactor: for rank≥2 params the second moment is factored into row/col
+    accumulators (O(n+m) memory — the trick that lets the 340B/400B archs fit
+    a 256-chip pod); 1-D params keep a full v.  β1 = 0 (no momentum) by
+    default, matching the memory budget in configs/registry.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..models.layers import P, is_spec
+
+__all__ = [
+    "adamw_init_specs",
+    "adafactor_init_specs",
+    "make_optimizer",
+    "cosine_schedule",
+]
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init_specs(param_specs):
+    def one(s: P):
+        return {
+            "m": P(s.shape, s.axes, "zeros", dtype=jnp.float32),
+            "v": P(s.shape, s.axes, "zeros", dtype=jnp.float32),
+        }
+
+    return jax.tree.map(one, param_specs, is_leaf=is_spec)
+
+
+def _adamw_update(p, g, st, lr, b1, b2, eps, wd, step):
+    g = g.astype(jnp.float32)
+    m = b1 * st["m"] + (1 - b1) * g
+    v = b2 * st["v"] + (1 - b2) * g * g
+    mh = m / (1 - b1**step)
+    vh = v / (1 - b2**step)
+    upd = mh / (jnp.sqrt(vh) + eps) + wd * p.astype(jnp.float32)
+    return (p - lr * upd.astype(p.dtype)).astype(p.dtype), {"m": m, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern 2018), factored v, no momentum
+# ---------------------------------------------------------------------------
+
+def adafactor_init_specs(param_specs):
+    def one(s: P):
+        if len(s.shape) >= 2:
+            row_shape = s.shape[:-1]
+            col_shape = s.shape[:-2] + s.shape[-1:]
+            return {
+                "vr": P(row_shape, s.axes[:-1], "zeros", dtype=jnp.float32),
+                "vc": P(col_shape, s.axes[:-2] + s.axes[-1:], "zeros",
+                        dtype=jnp.float32),
+            }
+        return {"v": P(s.shape, s.axes, "zeros", dtype=jnp.float32)}
+
+    return jax.tree.map(one, param_specs, is_leaf=is_spec)
+
+
+def _adafactor_update(p, g, st, lr, b2, eps, wd, step):
+    g = g.astype(jnp.float32)
+    if "vr" in st:
+        vr = b2 * st["vr"] + (1 - b2) * jnp.mean(g * g, axis=-1)
+        vc = b2 * st["vc"] + (1 - b2) * jnp.mean(g * g, axis=-2)
+        # factored precond: v ≈ vr vc / mean(vr)
+        denom = jnp.clip(jnp.mean(vr, axis=-1, keepdims=True), 1e-30, None)
+        vhat = vr[..., :, None] * vc[..., None, :] / denom[..., None]
+        new_st = {"vr": vr, "vc": vc}
+    else:
+        vhat = b2 * st["v"] + (1 - b2) * g * g
+        new_st = {"v": vhat}
+    # bias correction on the 2nd moment
+    vhat = vhat / (1 - b2**step)
+    upd = g / (jnp.sqrt(vhat) + eps)
+    # update clipping (RMS ≤ 1) — Adafactor's stabilizer
+    rms = jnp.sqrt(jnp.mean(upd * upd) + 1e-30)
+    upd = upd / jnp.maximum(1.0, rms)
+    upd = upd + wd * p.astype(jnp.float32)
+    return (p - lr * upd.astype(p.dtype)).astype(p.dtype), new_st
+
+
+# ---------------------------------------------------------------------------
+# factory
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init_specs_fn: callable
+    update_leaf: callable
+
+    def init_specs(self, param_specs):
+        return self.init_specs_fn(param_specs)
+
+    def update(self, params, grads, state, lr, step, wd=0.01):
+        """Tree-wide update; step is 1-based.  ``state`` mirrors ``params``
+        with a small dict at each leaf — tree-prefix mapping hands the whole
+        per-leaf dict to ``update_leaf``."""
+        pairs = jax.tree.map(
+            lambda p, g, st: self.update_leaf(p, g, st, lr, step=step, wd=wd),
+            params, grads, state,
+        )
+        is_pair = lambda x: isinstance(x, tuple)
+        new_params = jax.tree.map(lambda t: t[0], pairs, is_leaf=is_pair)
+        new_state = jax.tree.map(lambda t: t[1], pairs, is_leaf=is_pair)
+        return new_params, new_state
+
+
+def make_optimizer(name: str, b1=0.9, b2=0.999, eps=1e-8) -> Optimizer:
+    if name == "adamw":
+        return Optimizer(
+            "adamw",
+            adamw_init_specs,
+            lambda p, g, st, lr, step, wd: _adamw_update(
+                p, g, st, lr, b1, b2, eps, wd, step
+            ),
+        )
+    if name == "adafactor":
+        return Optimizer(
+            "adafactor",
+            adafactor_init_specs,
+            lambda p, g, st, lr, step, wd: _adafactor_update(
+                p, g, st, lr, 0.999, 1e-30, wd, step
+            ),
+        )
+    raise ValueError(name)

@@ -1,0 +1,8 @@
+from .siren import siren_apply, siren_init  # noqa: F401
+from .losses import (  # noqa: F401
+    GalerkinResidualLoss,
+    deep_ritz_loss,
+    pinn_poisson_loss,
+    vpinn_loss,
+)
+from .training import adam_init, adam_update, train_adam, lbfgs_minimize  # noqa: F401

@@ -1,0 +1,104 @@
+"""AGN — Autoregressive Graph Network backbone for operator learning
+(paper SM B.3.2): encoder–processor–decoder on the element graph, GraphSAGE
+processor, frequency-enhanced encoder/decoder MLPs, bundled (window-w)
+autoregressive updates with boundary clamping."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["element_graph_edges", "agn_init", "agn_apply", "agn_rollout", "freq_features"]
+
+
+def element_graph_edges(cells: np.ndarray) -> np.ndarray:
+    """Fully-connect nodes within each element (Fig. B.13), dedup + both
+    directions; returns (n_edges, 2) [src, dst]."""
+    k = cells.shape[1]
+    pairs = []
+    for a in range(k):
+        for b in range(k):
+            if a != b:
+                pairs.append(cells[:, [a, b]])
+    edges = np.concatenate(pairs, axis=0)
+    edges = np.unique(edges, axis=0)
+    return edges.astype(np.int64)
+
+
+def freq_features(x: jnp.ndarray, k_max: int) -> jnp.ndarray:
+    """Frequency-enhanced features (Eq. B.20)."""
+    feats = [x]
+    for k in range(1, k_max + 1):
+        feats.append(jnp.sin(k * x))
+        feats.append(jnp.cos(k * x))
+    return jnp.concatenate(feats, axis=-1)
+
+
+def _mlp_init(key, dims, dtype):
+    params = []
+    keys = jax.random.split(key, len(dims) - 1)
+    for kk, (i, o) in zip(keys, zip(dims[:-1], dims[1:])):
+        w = jax.random.normal(kk, (i, o), dtype) * jnp.sqrt(2.0 / i)
+        params.append({"w": w, "b": jnp.zeros((o,), dtype)})
+    return params
+
+
+def _mlp_apply(params, x, act=jax.nn.gelu):
+    for layer in params[:-1]:
+        x = act(x @ layer["w"] + layer["b"])
+    last = params[-1]
+    return x @ last["w"] + last["b"]
+
+
+def agn_init(key, in_channels: int, out_channels: int, hidden: int = 64,
+             n_layers: int = 3, k_freq: int = 4, coord_dim: int = 2,
+             dtype=jnp.float64):
+    """in_channels: state channels per node (window w); out per step bundle."""
+    keys = jax.random.split(key, n_layers + 2)
+    enc_in = (in_channels + coord_dim) * (2 * k_freq + 1)
+    enc = _mlp_init(keys[0], [enc_in, hidden, hidden], dtype)
+    sage = []
+    for i in range(n_layers):
+        # GraphSAGE: W_self · h + W_neigh · mean(h_nbr)
+        k1, k2 = jax.random.split(keys[1 + i])
+        sage.append({
+            "self": jax.random.normal(k1, (hidden, hidden), dtype) * jnp.sqrt(1.0 / hidden),
+            "neigh": jax.random.normal(k2, (hidden, hidden), dtype) * jnp.sqrt(1.0 / hidden),
+            "b": jnp.zeros((hidden,), dtype),
+        })
+    dec = _mlp_init(keys[-1], [hidden, hidden, out_channels], dtype)
+    return {"enc": enc, "sage": sage, "dec": dec}
+
+
+def agn_apply(params, node_state: jnp.ndarray, coords: jnp.ndarray,
+              edges: np.ndarray, degree: jnp.ndarray, k_freq: int = 4) -> jnp.ndarray:
+    """node_state: (N, C_in), coords: (N, d) → (N, C_out) bundled update."""
+    x = jnp.concatenate([node_state, coords], axis=-1)
+    h = _mlp_apply(params["enc"], freq_features(x, k_freq))
+    src, dst = jnp.asarray(edges[:, 0]), jnp.asarray(edges[:, 1])
+    for layer in params["sage"]:
+        msg = jax.ops.segment_sum(h[src], dst, num_segments=h.shape[0])
+        mean_nbr = msg / degree[:, None]
+        h = jax.nn.gelu(h @ layer["self"] + mean_nbr @ layer["neigh"] + layer["b"])
+    return _mlp_apply(params["dec"], h)
+
+
+def agn_rollout(params, u_window: jnp.ndarray, coords, edges, degree,
+                n_bundles: int, interior_mask: jnp.ndarray,
+                bc_values: jnp.ndarray | float = 0.0):
+    """Autoregressive rollout with window size w (Fig. B.14).
+
+    u_window: (N, w) initial window; each AGN call predicts a *delta bundle*
+    (N, w) that advances the window by w steps; Dirichlet nodes are clamped
+    after every bundle.  Returns (N, w·n_bundles) trajectory.
+    """
+    def step(window, _):
+        delta = agn_apply(params, window, coords, edges, degree)
+        new = window + delta
+        new = jnp.where(interior_mask[:, None], new, bc_values)
+        return new, new
+
+    _, traj = jax.lax.scan(step, u_window, None, length=n_bundles)
+    # traj: (n_bundles, N, w) → (N, w·n_bundles)
+    return jnp.transpose(traj, (1, 0, 2)).reshape(u_window.shape[0], -1)

@@ -1,0 +1,193 @@
+"""Physics-informed operator learning for time-dependent PDEs (paper §B.3).
+
+* Wave equation:   M (Uᵏ⁺² − 2Uᵏ⁺¹ + Uᵏ)/Δt² + c² K Uᵏ⁺¹ = 0      (Eq. B.16)
+* Allen–Cahn:      M (Uᵏ⁺¹ − Uᵏ)/Δt + a² K Uᵏ⁺¹ − F(Uᵏ⁺¹) = 0     (Eq. B.19)
+
+The discrete per-step residuals define the TensorPILS operator-learning loss
+(Eq. B.22); reference trajectories come from the same matrices via
+Crank–Nicolson (wave) / backward Euler + Newton (Allen–Cahn).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import (
+    CSR,
+    DirichletCondenser,
+    FunctionSpace,
+    GalerkinAssembler,
+    cg,
+    jacobi_preconditioner,
+    sparse_solve,
+)
+from ..core.mesh import Mesh, element_for_mesh
+
+__all__ = [
+    "TimeDependentProblem",
+    "random_initial_condition",
+    "wave_residuals",
+    "allen_cahn_residuals",
+]
+
+
+def random_initial_condition(key, points: np.ndarray, k_modes: int = 6,
+                             r: float = 0.5, domain_scale=1.0) -> jnp.ndarray:
+    """Multi-frequency sine expansion (Eq. B.15), a ~ U[-1, 1]."""
+    x = jnp.asarray(points[:, 0]) / domain_scale
+    y = jnp.asarray(points[:, 1]) / domain_scale
+    a = jax.random.uniform(key, (k_modes, k_modes), minval=-1.0, maxval=1.0)
+    ii = jnp.arange(1, k_modes + 1)[:, None]
+    jj = jnp.arange(1, k_modes + 1)[None, :]
+    amp = a * (ii**2 + jj**2) ** (-r)
+    sx = jnp.sin(jnp.pi * ii[:, :, None] * x[None, None, :])   # (K,1,N)->(K,K,N)
+    sy = jnp.sin(jnp.pi * jj[:, :, None] * y[None, None, :])
+    field = jnp.einsum("kl,kln,kln->n", amp, sx, sy)
+    return (jnp.pi / k_modes**2) * field
+
+
+@dataclasses.dataclass
+class TimeDependentProblem:
+    """Owns M, K (condensed) for a mesh; provides residuals + reference
+    integrators for the wave / Allen–Cahn benchmarks."""
+
+    mesh: Mesh
+    c: float = 4.0                 # wave speed
+    a2: float = 1e-3               # AC diffusion a²
+    eps2: float = 5.0              # AC reaction strength ε²
+    dt: float = 5e-4
+
+    def __post_init__(self):
+        self.space = FunctionSpace(self.mesh, element_for_mesh(self.mesh))
+        self.asm = GalerkinAssembler(self.space)
+        bdofs = self.space.boundary_dofs()
+        self.bc = DirichletCondenser(self.asm, bdofs)
+        self.mass = self.asm.assemble_mass()
+        self.stiff = self.asm.assemble_stiffness()
+        self.interior = jnp.asarray(self.bc.free_mask, dtype=bool)
+        self.n = self.space.num_dofs
+
+    # -- discrete residuals (the TensorPILS loss terms) ------------------------
+    def wave_residual(self, u0, u1, u2):
+        """R = M(u2 − 2u1 + u0)/Δt² + c²K u1, masked to interior rows."""
+        r = self.mass.matvec((u2 - 2 * u1 + u0) / self.dt**2) + (
+            self.c**2
+        ) * self.stiff.matvec(u1)
+        return r * self.bc.free_mask
+
+    def wave_residual_normalized(self, u0, u1, u2):
+        """Same zero set as :meth:`wave_residual`, preconditioned for
+        training: scaled by Δt² and the lumped-mass inverse so the loss is
+        O(u) instead of O(u/Δt²) — the conditioning trick that makes the
+        Galerkin operator-learning loss trainable at small Δt."""
+        if not hasattr(self, "_m_lumped"):
+            ones = jnp.ones(self.n)
+            self._m_lumped = jnp.maximum(self.mass.matvec(ones), 1e-12)
+        r = (u2 - 2 * u1 + u0) + self.dt**2 * self.c**2 * (
+            self.stiff.matvec(u1) / self._m_lumped
+        )
+        return r * self.bc.free_mask
+
+    def ac_residual(self, u0, u1):
+        """R = M(u1 − u0)/Δt + a²K u1 − F_react(u1)."""
+        react = self.asm.assemble_reaction_load(
+            u1, lambda u: -self.eps2 * u * (u**2 - 1.0)
+        )
+        r = self.mass.matvec((u1 - u0) / self.dt) + self.a2 * self.stiff.matvec(u1) - react
+        return r * self.bc.free_mask
+
+    # -- reference integrators --------------------------------------------------
+    def _condensed(self, csr_vals_shift):
+        return self.bc.apply_matrix_only(csr_vals_shift)
+
+    def wave_reference(self, u_init: jnp.ndarray, n_steps: int) -> jnp.ndarray:
+        """Newmark-β (β=¼, γ=½ — average acceleration, unconditionally
+        stable, energy-preserving: the paper's 'Crank–Nicolson-style'
+        integrator), zero initial velocity.  Returns (n_steps, N)."""
+        dt, c2 = self.dt, self.c**2
+        beta, gamma = 0.25, 0.5
+        lhs_vals = self.mass.vals + beta * dt**2 * c2 * self.stiff.vals
+        lhs = self._condensed(dataclasses.replace(self.mass, vals=lhs_vals))
+        mpre = jacobi_preconditioner(lhs)
+        mass_c = self._condensed(self.mass)
+        mpre_m = jacobi_preconditioner(mass_c)
+
+        u0 = u_init * self.bc.free_mask
+        v0 = jnp.zeros_like(u0)
+        a0, _ = cg(
+            mass_c.matvec, -c2 * self.stiff.matvec(u0) * self.bc.free_mask,
+            m=mpre_m, tol=1e-10, maxiter=2000,
+        )
+
+        @jax.jit
+        def step(carry, _):
+            u, v, a = carry
+            u_star = u + dt * v + 0.5 * dt**2 * (1 - 2 * beta) * a
+            v_star = v + dt * (1 - gamma) * a
+            rhs = -c2 * self.stiff.matvec(u_star) * self.bc.free_mask
+            a_new, _ = cg(lhs.matvec, rhs, m=mpre, tol=1e-10, maxiter=2000)
+            u_new = (u_star + beta * dt**2 * a_new) * self.bc.free_mask
+            v_new = v_star + gamma * dt * a_new
+            return (u_new, v_new, a_new), u_new
+
+        _, traj = jax.lax.scan(step, (u0, v0, a0), None, length=n_steps)
+        return traj
+
+    def ac_reference(self, u_init: jnp.ndarray, n_steps: int,
+                     newton_iters: int = 3) -> jnp.ndarray:
+        """Backward Euler with Newton (paper B.3.1). Returns (n_steps, N)."""
+        dt = self.dt
+
+        @jax.jit
+        def step(u0, _):
+            u = u0
+
+            def newton(u, _):
+                # residual and Jacobian: J = M/dt + a²K + M[f'(u)] (mass-weighted)
+                res = self.ac_residual(u0, u)
+                # J = M/dt + a²K − M[f'(u)] with f'(u) = −ε²(3u²−1):
+                # the reaction Jacobian is a mass matrix weighted by −f'(u),
+                # assembled through the same Map-Reduce (nodal coefficient).
+                fprime = lambda w: -self.eps2 * (3 * w**2 - 1.0)
+                jac_vals = self.asm._assemble_matrix_vals(-fprime(u), "mass")
+                jac = CSR(
+                    self.mass.vals / dt + self.a2 * self.stiff.vals + jac_vals,
+                    self.mass.indptr, self.mass.indices, self.mass.row_of_nnz,
+                    self.mass.shape, self.mass.diag_pos,
+                )
+                jac = self.bc.apply_matrix_only(jac)
+                du, _ = cg(jac.matvec, res, m=jacobi_preconditioner(jac),
+                           tol=1e-10, maxiter=2000)
+                return u - du, None
+
+            u, _ = jax.lax.scan(newton, u, None, length=newton_iters)
+            u = u * self.bc.free_mask
+            return u, u
+
+        u0 = u_init * self.bc.free_mask
+        _, traj = jax.lax.scan(step, u0, None, length=n_steps)
+        return traj
+
+    # -- losses over trajectories (Eq. B.22) -------------------------------------
+    def wave_trajectory_loss(self, traj: jnp.ndarray, normalized: bool = False):
+        """traj: (T, N) including the first two known steps."""
+        res = self.wave_residual_normalized if normalized else self.wave_residual
+        r = jax.vmap(res)(traj[:-2], traj[1:-1], traj[2:])
+        return jnp.mean(jnp.sum(r**2, axis=-1))
+
+    def ac_trajectory_loss(self, traj: jnp.ndarray) -> jnp.ndarray:
+        r = jax.vmap(self.ac_residual)(traj[:-1], traj[1:])
+        return jnp.mean(jnp.sum(r**2, axis=-1))
+
+
+def wave_residuals(problem: TimeDependentProblem, traj):
+    return jax.vmap(problem.wave_residual)(traj[:-2], traj[1:-1], traj[2:])
+
+
+def allen_cahn_residuals(problem: TimeDependentProblem, traj):
+    return jax.vmap(problem.ac_residual)(traj[:-1], traj[1:])

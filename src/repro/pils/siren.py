@@ -1,0 +1,39 @@
+"""SIREN backbone (Sitzmann et al. 2020) — shared by all neural-solver
+baselines in the paper's controlled comparison (SM B.2.2)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["siren_init", "siren_apply"]
+
+
+def siren_init(key, in_dim: int, hidden: int, out_dim: int, depth: int = 4,
+               omega0: float = 30.0, dtype=jnp.float64):
+    """Paper setup: 4 hidden layers, width 64, ω0 = 30, SIREN init."""
+    keys = jax.random.split(key, depth + 1)
+    params = []
+    dims = [in_dim] + [hidden] * depth + [out_dim]
+    for i, (d_in, d_out) in enumerate(zip(dims[:-1], dims[1:])):
+        k_w, _ = jax.random.split(keys[i])
+        if i == 0:
+            bound = 1.0 / d_in
+        else:
+            bound = np.sqrt(6.0 / d_in) / omega0
+        w = jax.random.uniform(k_w, (d_in, d_out), minval=-bound, maxval=bound, dtype=dtype)
+        b = jnp.zeros((d_out,), dtype=dtype)
+        params.append({"w": w, "b": b})
+    return {"layers": params, "omega0": jnp.asarray(omega0, dtype=dtype)}
+
+
+def siren_apply(params, x: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., in_dim) → (..., out_dim)."""
+    omega0 = params["omega0"]
+    layers = params["layers"]
+    h = x
+    for layer in layers[:-1]:
+        h = jnp.sin(omega0 * (h @ layer["w"] + layer["b"]))
+    last = layers[-1]
+    return h @ last["w"] + last["b"]

@@ -1,0 +1,125 @@
+"""Optimizers for PILS training: Adam and a compact L-BFGS.
+
+Pure-jax, pytree-generic (no optax dependency).  Matches the paper's schedule
+"N iterations of ADAM, followed by M iterations of L-BFGS" (Table 1).
+"""
+
+from __future__ import annotations
+
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["adam_init", "adam_update", "train_adam", "lbfgs_minimize"]
+
+
+def adam_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params), "t": jnp.zeros(())}
+
+
+@partial(jax.jit, static_argnums=(4, 5, 6))
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1.0
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1**t)
+    vhat_scale = 1.0 / (1 - b2**t)
+    new_params = jax.tree.map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params, m, v,
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def train_adam(loss_fn, params, steps: int, lr=1e-3, log_every=0, decay=None):
+    """Generic Adam loop; returns (params, history, it/s)."""
+    state = adam_init(params)
+    val_grad = jax.jit(jax.value_and_grad(loss_fn))
+    hist = []
+    t0 = time.perf_counter()
+    for i in range(steps):
+        cur_lr = lr if decay is None else decay(i, lr)
+        loss, grads = val_grad(params)
+        params, state = adam_update(params, grads, state, cur_lr)
+        if log_every and i % log_every == 0:
+            hist.append(float(loss))
+    jax.block_until_ready(params)
+    its = steps / (time.perf_counter() - t0)
+    return params, hist, its
+
+
+# ---------------------------------------------------------------------------
+# L-BFGS (two-loop recursion + backtracking Armijo line search)
+# ---------------------------------------------------------------------------
+
+def _tree_dot(a, b):
+    return sum(jnp.vdot(x, y) for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def _tree_axpy(alpha, x, y):
+    return jax.tree.map(lambda a, b: alpha * a + b, x, y)
+
+
+def lbfgs_minimize(loss_fn, params, steps: int = 200, history: int = 10,
+                   c1: float = 1e-4, max_ls: int = 20):
+    """Compact L-BFGS; python-level loop, jitted value_and_grad.
+
+    Good enough to reproduce the paper's "+200 L-BFGS" refinement stage on
+    CPU budgets; returns (params, losses, it/s).
+    """
+    val_grad = jax.jit(jax.value_and_grad(loss_fn))
+    s_hist, y_hist, rho_hist = [], [], []
+    f0, g = val_grad(params)
+    losses = [float(f0)]
+    t0 = time.perf_counter()
+    n_done = 0
+    for it in range(steps):
+        # two-loop recursion
+        q = jax.tree.map(lambda x: -x, g)
+        alphas = []
+        for s, y, rho in zip(reversed(s_hist), reversed(y_hist), reversed(rho_hist)):
+            a = rho * _tree_dot(s, q)
+            q = _tree_axpy(-a, y, q)
+            alphas.append(a)
+        if y_hist:
+            gamma = _tree_dot(s_hist[-1], y_hist[-1]) / _tree_dot(y_hist[-1], y_hist[-1])
+            q = jax.tree.map(lambda x: gamma * x, q)
+        for (s, y, rho), a in zip(zip(s_hist, y_hist, rho_hist), reversed(alphas)):
+            b = rho * _tree_dot(y, q)
+            q = _tree_axpy(a - b, s, q)
+
+        d = q
+        gtd = _tree_dot(g, d)
+        if gtd >= 0:  # not a descent direction → reset memory, steepest descent
+            d = jax.tree.map(lambda x: -x, g)
+            gtd = _tree_dot(g, d)
+            s_hist, y_hist, rho_hist = [], [], []
+
+        # backtracking Armijo
+        step = 1.0
+        f_cur = losses[-1]
+        ok = False
+        for _ in range(max_ls):
+            trial = _tree_axpy(step, d, params)
+            f_new, g_new = val_grad(trial)
+            if bool(jnp.isfinite(f_new)) and float(f_new) <= f_cur + c1 * step * float(gtd):
+                ok = True
+                break
+            step *= 0.5
+        if not ok:
+            break
+        s = jax.tree.map(lambda a, b: a - b, trial, params)
+        yv = jax.tree.map(lambda a, b: a - b, g_new, g)
+        sy = float(_tree_dot(s, yv))
+        if sy > 1e-12:
+            s_hist.append(s); y_hist.append(yv); rho_hist.append(1.0 / sy)
+            if len(s_hist) > history:
+                s_hist.pop(0); y_hist.pop(0); rho_hist.pop(0)
+        params, g = trial, g_new
+        losses.append(float(f_new))
+        n_done = it + 1
+    its = max(n_done, 1) / (time.perf_counter() - t0)
+    return params, losses, its

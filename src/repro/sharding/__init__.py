@@ -1,0 +1,9 @@
+from .partitioning import (  # noqa: F401
+    ShardingRules,
+    annotate,
+    make_shardings,
+    logical_to_spec,
+    use_rules,
+    RULES_SINGLE_POD,
+    RULES_MULTI_POD,
+)

@@ -1,0 +1,130 @@
+"""Logical-axis partitioning (MaxText-style rules → GSPMD).
+
+Every parameter spec carries *logical* axis names; a :class:`ShardingRules`
+maps logical names → mesh axes.  Activations are annotated inside model code
+via :func:`annotate` (no-op when no rules are active, so models run un-meshed
+on CPU tests).
+
+Default layout (single pod, mesh ('data', 'model') = (16, 16)):
+  * FSDP: the residual dimension 'embed' shards over 'data' — ZeRO-3-style;
+    XLA inserts the all-gathers at use sites.
+  * Tensor parallel: 'heads' / 'kv' / 'mlp' / 'vocab' / 'expert' over 'model'
+    (Megatron layout: qkv+up are column-parallel, o+down row-parallel).
+  * Activations: batch over 'data' (and 'pod'); 'seq_act' optionally over
+    'model' (sequence parallelism — a perf-iteration lever, see §Perf).
+  * KV cache: 'kv_cache' heads over 'model' (replicated to TP degree when
+    kv_heads < TP), batch over 'data'.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from ..models.layers import P as ParamP, is_spec
+
+__all__ = [
+    "ShardingRules",
+    "RULES_SINGLE_POD",
+    "RULES_MULTI_POD",
+    "use_rules",
+    "annotate",
+    "logical_to_spec",
+    "make_shardings",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    mapping: dict  # logical axis name -> mesh axis | tuple | None
+
+    def spec_for(self, axes: tuple) -> PartitionSpec:
+        used: set = set()
+        out = []
+        for ax in axes:
+            mesh_ax = self.mapping.get(ax) if ax is not None else None
+            # a mesh axis may appear at most once in a PartitionSpec
+            if mesh_ax is None:
+                out.append(None)
+                continue
+            key = tuple(mesh_ax) if isinstance(mesh_ax, (tuple, list)) else (mesh_ax,)
+            if used & set(key):
+                out.append(None)
+                continue
+            used |= set(key)
+            out.append(mesh_ax if not isinstance(mesh_ax, list) else tuple(mesh_ax))
+        return PartitionSpec(*out)
+
+
+_BASE = {
+    "embed": "data",          # FSDP
+    "heads": "model",
+    "kv": "model",
+    "mlp": "model",
+    "vocab": "model",
+    "expert": "model",
+    "expert_mlp": None,
+    "layers": None,
+    "batch": "data",
+    "seq_act": None,          # flip to 'model' for sequence parallelism
+    "seq_cache": None,
+    "kv_cache": "model",
+    "ssm_heads": "model",
+}
+
+RULES_SINGLE_POD = ShardingRules(dict(_BASE))
+RULES_MULTI_POD = ShardingRules(
+    {**_BASE, "embed": ("pod", "data"), "batch": ("pod", "data")}
+)
+
+
+class _State(threading.local):
+    rules: ShardingRules | None = None
+    active: bool = False
+
+
+_state = _State()
+
+
+@contextlib.contextmanager
+def use_rules(rules: ShardingRules | None):
+    prev_r, prev_a = _state.rules, _state.active
+    _state.rules, _state.active = rules, rules is not None
+    try:
+        yield
+    finally:
+        _state.rules, _state.active = prev_r, prev_a
+
+
+def logical_to_spec(axes: tuple, rules: ShardingRules | None = None) -> PartitionSpec:
+    rules = rules or _state.rules
+    assert rules is not None
+    return rules.spec_for(axes)
+
+
+def annotate(x, *axes):
+    """with_sharding_constraint via logical axes; no-op without active rules.
+
+    Must be called under a ``jax.sharding.use_mesh`` (or jit-with-mesh)
+    context so bare PartitionSpecs resolve.
+    """
+    if not _state.active:
+        return x
+    spec = _state.rules.spec_for(axes)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def make_shardings(specs, mesh: Mesh, rules: ShardingRules):
+    """Pytree of P-specs (or axes tuples) → pytree of NamedShardings."""
+
+    def one(s):
+        axes = s.axes if is_spec(s) else s
+        return NamedSharding(mesh, rules.spec_for(axes))
+
+    return jax.tree.map(one, specs, is_leaf=lambda s: is_spec(s) or (
+        isinstance(s, tuple) and all(isinstance(a, (str, type(None))) for a in s)
+    ))

@@ -1,0 +1,2 @@
+from .train_step import TrainState, make_train_state_specs, make_train_step  # noqa: F401
+from .serve_step import make_decode_fn, make_prefill_fn  # noqa: F401

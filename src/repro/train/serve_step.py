@@ -1,0 +1,62 @@
+"""Serving steps: prefill (prompt → cache) and decode (one token vs cache).
+
+Served weights are bf16 copies of the training params; the KV cache is
+donated on decode so it updates in place (no per-step reallocation).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeSpec
+from ..models.layers import P, is_spec
+from ..models.model_zoo import build_model
+from ..sharding.partitioning import ShardingRules, make_shardings, use_rules
+
+__all__ = ["serve_param_specs", "make_prefill_fn", "make_decode_fn"]
+
+
+def serve_param_specs(cfg: ArchConfig):
+    """bf16 copies of the parameter specs (weights as served)."""
+    model = build_model(cfg)
+
+    def to_bf16(s: P) -> P:
+        return P(s.shape, s.axes, s.init, s.scale, jnp.bfloat16)
+
+    return jax.tree.map(to_bf16, model.param_specs(), is_leaf=is_spec)
+
+
+def make_prefill_fn(cfg: ArchConfig, shape: ShapeSpec, mesh, rules: ShardingRules):
+    model = build_model(cfg)
+    max_len = shape.seq_len
+
+    def prefill(params, batch):
+        with use_rules(rules):
+            return model.prefill(params, batch, max_len)
+
+    pspecs = serve_param_specs(cfg)
+    param_sh = make_shardings(pspecs, mesh, rules)
+    batch_sh = make_shardings(model.batch_axes(shape), mesh, rules)
+    return jax.jit(prefill, in_shardings=(param_sh, batch_sh)), pspecs
+
+
+def make_decode_fn(cfg: ArchConfig, shape: ShapeSpec, mesh, rules: ShardingRules):
+    model = build_model(cfg)
+
+    def decode(params, batch, cache):
+        with use_rules(rules):
+            return model.decode(params, batch, cache)
+
+    pspecs = serve_param_specs(cfg)
+    cspecs = model.cache_specs(shape.global_batch, shape.seq_len)
+    param_sh = make_shardings(pspecs, mesh, rules)
+    cache_sh = make_shardings(cspecs, mesh, rules)
+    batch_axes = model.batch_axes(shape)
+    batch_sh = make_shardings(batch_axes, mesh, rules)
+    jitted = jax.jit(
+        decode,
+        in_shardings=(param_sh, batch_sh, cache_sh),
+        donate_argnums=(2,),
+    )
+    return jitted, pspecs, cspecs

@@ -1,0 +1,124 @@
+"""Sharded training step: grad accumulation, mixed precision, fused update.
+
+* **Grad accumulation** — ``lax.scan`` over microbatches bounds activation
+  memory (the knob that fits the 340B/400B archs on a 256-chip pod); the
+  accumulator dtype is ``cfg.grad_dtype`` (bf16 = compressed accumulation
+  buffers; actual collective dtypes are verified from the dry-run HLO).
+* **Mixed precision** — params are stored in ``cfg.param_dtype`` and cast to
+  ``cfg.compute_dtype`` inside the forward; logits/loss in f32.
+* **In-place update** — the caller donates the state buffers
+  (``donate_argnums=0``) so params/optimizer state update in place.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeSpec
+from ..models.layers import P, is_spec
+from ..models.model_zoo import build_model
+from ..optim import cosine_schedule, make_optimizer
+from ..sharding.partitioning import ShardingRules, make_shardings, use_rules
+
+__all__ = ["TrainState", "make_train_state_specs", "make_train_step"]
+
+TrainState = dict  # {"params": tree, "opt": tree, "step": scalar}
+
+
+def make_train_state_specs(cfg: ArchConfig):
+    model = build_model(cfg)
+    pspecs = model.param_specs()
+    opt = make_optimizer(cfg.optimizer)
+    ospecs = opt.init_specs(pspecs)
+    return {
+        "params": pspecs,
+        "opt": ospecs,
+        "step": P((), (), "zeros", dtype=jnp.int32),
+    }
+
+
+def _split_microbatches(batch: dict, n: int) -> dict:
+    def split(x):
+        b = x.shape[0]
+        assert b % n == 0, f"batch {b} not divisible by {n} microbatches"
+        return x.reshape((n, b // n) + x.shape[1:])
+
+    return {k: split(v) if getattr(v, "ndim", 0) > 0 else v for k, v in batch.items()}
+
+
+def make_train_step(cfg: ArchConfig, shape: ShapeSpec, *, lr: float = 3e-4,
+                    warmup: int = 100, total_steps: int = 10000,
+                    weight_decay: float = 0.01):
+    """Returns ``train_step(state, batch) -> (state, metrics)`` (un-jitted —
+    the caller jits with shardings; see launch/dryrun.py and launch/train.py).
+    """
+    model = build_model(cfg)
+    opt = make_optimizer(cfg.optimizer)
+    schedule = cosine_schedule(lr, warmup, total_steps)
+    n_micro = cfg.grad_accum(shape.name)
+    gdt = jnp.dtype(cfg.grad_dtype)
+
+    def loss_fn(params, mb):
+        return model.loss(params, mb)
+
+    def train_step(state: TrainState, batch: dict):
+        params = state["params"]
+
+        if n_micro == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            mbs = _split_microbatches(batch, n_micro)
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, gdt), params
+            )
+
+            def micro(carry, mb):
+                acc, loss_acc = carry
+                loss, g = jax.value_and_grad(loss_fn)(params, mb)
+                acc = jax.tree.map(lambda a, x: a + x.astype(gdt), acc, g)
+                return (acc, loss_acc + loss), None
+
+            (grads, loss), _ = jax.lax.scan(micro, (zero, 0.0), mbs)
+            loss = loss / n_micro
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32) / n_micro, grads)
+
+        step = state["step"] + 1
+        cur_lr = schedule(step)
+        new_params, new_opt = opt.update(
+            params, grads, state["opt"], cur_lr, step.astype(jnp.float32),
+            wd=weight_decay,
+        )
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree.leaves(grads))
+        )
+        new_state = {"params": new_params, "opt": new_opt, "step": step}
+        return new_state, {"loss": loss, "grad_norm": gnorm, "lr": cur_lr}
+
+    return train_step
+
+
+def jit_train_step(cfg, shape, mesh, rules: ShardingRules, **kw):
+    """Fully-jitted sharded train step + all the specs the launcher needs."""
+    state_specs = make_train_state_specs(cfg)
+    model = build_model(cfg)
+    step_fn = make_train_step(cfg, shape, **kw)
+
+    state_sh = make_shardings(state_specs, mesh, rules)
+    batch_axes = model.batch_axes(shape)
+    batch_sh = make_shardings(batch_axes, mesh, rules)
+
+    def wrapped(state, batch):
+        with use_rules(rules):
+            return step_fn(state, batch)
+
+    jitted = jax.jit(
+        wrapped,
+        in_shardings=(state_sh, batch_sh),
+        donate_argnums=(0,),
+    )
+    return jitted, state_specs, state_sh, batch_sh

@@ -1,0 +1,138 @@
+"""Pallas kernel tests: shape/dtype sweeps + allclose vs the ref.py oracles
+(interpret=True executes kernel bodies in Python on CPU)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.core  # noqa: F401  (x64 on)
+from repro.core import FunctionSpace, GalerkinAssembler, csr_to_ell, unit_square_tri, unit_cube_tet
+from repro.core.mesh import element_for_mesh
+from repro.kernels import batch_map_stiffness, ell_matvec, ell_residual
+from repro.kernels.local_assembly import local_stiffness_p1
+from repro.kernels.ref import (
+    galerkin_residual_ell_ref,
+    local_stiffness_p1_ref,
+    spmv_ell_ref,
+)
+from repro.kernels.spmv_ell import spmv_ell
+
+
+def _random_simplices(rng, e, d, dtype):
+    ident = np.concatenate([np.zeros((1, d)), np.eye(d)], axis=0)
+    base = rng.normal(size=(e, 1, d))
+    jitter = 0.15 * rng.normal(size=(e, d + 1, d))
+    return jnp.asarray((base + ident[None] + jitter).astype(dtype))
+
+
+@pytest.mark.parametrize("d", [2, 3])
+@pytest.mark.parametrize("e", [1, 7, 129, 2048, 5000])
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_local_assembly_sweep(d, e, dtype):
+    rng = np.random.default_rng(e * d)
+    coords = _random_simplices(rng, e, d, dtype)
+    rho = jnp.asarray(rng.uniform(0.5, 2.0, size=e).astype(dtype))
+    got = batch_map_stiffness(coords, rho, interpret=True)
+    want = local_stiffness_p1_ref(coords, rho)
+    tol = 2e-4 if dtype == np.float32 else 1e-11
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("block_e", [128, 512])
+def test_local_assembly_block_size_invariance(block_e):
+    rng = np.random.default_rng(3)
+    coords = _random_simplices(rng, 700, 2, np.float64)
+    rho = jnp.ones(700)
+    a = local_stiffness_p1(coords, rho, interpret=True, block_e=block_e)
+    b = local_stiffness_p1_ref(coords, rho)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-12)
+
+
+def test_local_assembly_matches_full_assembler():
+    """Kernel output → Sparse-Reduce must equal the einsum assembler's K."""
+    from repro.core.assembly import reduce_matrix
+
+    m = unit_cube_tet(4)
+    space = FunctionSpace(m, element_for_mesh(m))
+    asm = GalerkinAssembler(space)
+    rho = jnp.asarray(np.random.default_rng(0).uniform(0.5, 2, m.num_cells))
+    k_ref = asm.assemble_stiffness(rho)
+    k_local = batch_map_stiffness(asm.coords, rho, interpret=True)
+    vals = reduce_matrix(k_local, asm.mat_routing)
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(k_ref.vals), atol=1e-12)
+
+
+@pytest.mark.parametrize("n,l", [(5, 1), (100, 7), (4096, 16), (6000, 9)])
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_spmv_ell_sweep(n, l, dtype):
+    rng = np.random.default_rng(n + l)
+    vals = jnp.asarray(rng.normal(size=(n, l)).astype(dtype))
+    cols = jnp.asarray(rng.integers(0, n, size=(n, l)))
+    x = jnp.asarray(rng.normal(size=n).astype(dtype))
+    got = spmv_ell(vals, cols, x, interpret=True)
+    want = spmv_ell_ref(vals, cols, x)
+    tol = 1e-4 if dtype == np.float32 else 1e-12
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=tol, rtol=tol)
+
+
+def test_spmv_matches_csr_on_fem_matrix():
+    m = unit_square_tri(15)
+    space = FunctionSpace(m, element_for_mesh(m))
+    k = GalerkinAssembler(space).assemble_stiffness()
+    ell = csr_to_ell(k)
+    x = jnp.asarray(np.random.default_rng(1).normal(size=k.shape[0]))
+    np.testing.assert_allclose(
+        np.asarray(ell_matvec(ell, x, interpret=True)),
+        np.asarray(k.matvec(x)),
+        atol=1e-12,
+    )
+
+
+def test_fused_residual():
+    rng = np.random.default_rng(9)
+    n, l = 513, 5
+    vals = jnp.asarray(rng.normal(size=(n, l)))
+    cols = jnp.asarray(rng.integers(0, n, size=(n, l)))
+    u = jnp.asarray(rng.normal(size=n))
+    f = jnp.asarray(rng.normal(size=n))
+    got = ell_residual(
+        type("E", (), {"vals": vals, "cols": np.asarray(cols)})(), u, f,
+        interpret=True,
+    )
+    want = galerkin_residual_ell_ref(vals, cols, u, f)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# property-based: kernel invariances (hypothesis)
+# ---------------------------------------------------------------------------
+
+from hypothesis import given, settings, strategies as st
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    e=st.integers(min_value=1, max_value=300),
+    seed=st.integers(min_value=0, max_value=2**16),
+    scale=st.floats(min_value=0.1, max_value=10.0),
+)
+def test_local_stiffness_properties(e, seed, scale):
+    """Invariances of the P1 stiffness map: symmetry, zero row-sum
+    (constants in kernel), translation invariance, ρ-linearity."""
+    rng = np.random.default_rng(seed)
+    coords = _random_simplices(rng, e, 2, np.float64)
+    rho = jnp.asarray(rng.uniform(0.5, 2.0, size=e))
+    k = batch_map_stiffness(coords, rho, interpret=True)
+    k_np = np.asarray(k)
+    # symmetry
+    np.testing.assert_allclose(k_np, np.swapaxes(k_np, 1, 2), atol=1e-11)
+    # row sums vanish (gradient of constant)
+    np.testing.assert_allclose(k_np.sum(axis=2), 0.0, atol=1e-10)
+    # translation invariance
+    shifted = coords + jnp.asarray(rng.normal(size=(1, 1, 2)))
+    k2 = batch_map_stiffness(shifted, rho, interpret=True)
+    np.testing.assert_allclose(k_np, np.asarray(k2), atol=1e-9)
+    # linearity in rho
+    k3 = batch_map_stiffness(coords, rho * scale, interpret=True)
+    np.testing.assert_allclose(np.asarray(k3), k_np * scale, rtol=1e-10, atol=1e-12)

@@ -1,7 +1,15 @@
-"""Shared benchmark utilities: timing + CSV emission."""
+"""Shared benchmark utilities: timing + CSV/JSON emission.
+
+Every row goes to stdout as ``name,us_per_call,derived`` CSV (the harness
+contract).  Set ``BENCH_JSON=<path>`` to additionally append one JSON
+object per row (``{"name", "us_per_call", "derived", ...extras}``) — the
+machine-readable results file consumed by dashboards/CI trend jobs.
+"""
 
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -22,3 +30,18 @@ def time_fn(fn, *args, warmup: int = 1, iters: int = 5, **kw) -> float:
 
 def emit(name: str, us_per_call: float, derived: str = ""):
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def emit_json(name: str, us_per_call: float, derived: str = "", **extra):
+    """CSV row (same contract as :func:`emit`) + optional JSON-lines record.
+
+    ``extra`` keys land only in the JSON record, which is appended to the
+    file named by the ``BENCH_JSON`` environment variable when set.
+    """
+    emit(name, us_per_call, derived)
+    path = os.environ.get("BENCH_JSON")
+    if path:
+        record = {"name": name, "us_per_call": round(us_per_call, 1),
+                  "derived": derived, **extra}
+        with open(path, "a") as f:
+            f.write(json.dumps(record) + "\n")

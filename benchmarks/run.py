@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  Module → paper artifact map:
   bench_operator_learning  — Table 2 (wave operator learning, ID/OOD)
   bench_topo_opt           — Table 3 (cantilever SIMP)
   bench_kernels            — Pallas kernel microbench (interpret mode)
+  bench_transient          — repro.transient rollouts (heat/wave, CSR vs ELL)
   bench_dryrun_roofline    — harness roofline table (from dry-run JSON)
 """
 
@@ -29,6 +30,7 @@ def main() -> None:
         bench_operator_learning,
         bench_solver_scaling,
         bench_topo_opt,
+        bench_transient,
     )
 
     modules = [
@@ -41,6 +43,7 @@ def main() -> None:
         bench_operator_learning,
         bench_topo_opt,
         bench_kernels,
+        bench_transient,
         bench_dryrun_roofline,
     ]
     print("name,us_per_call,derived")

@@ -15,6 +15,7 @@ from repro.core import disk_tri
 from repro.pils.gnn import agn_init, agn_rollout, element_graph_edges
 from repro.pils.operator import TimeDependentProblem, random_initial_condition
 from repro.pils.training import adam_init, adam_update
+from repro.transient import batched_rollout
 
 W, N_BUNDLES, EPOCHS = 4, 8, 200
 tp = TimeDependentProblem(disk_tri(6), dt=5e-4, c=4.0)
@@ -28,11 +29,13 @@ total = W * N_BUNDLES
 print(f"mesh: {mesh.num_vertices} nodes / {mesh.num_cells} elements; rollout {total} steps")
 
 keys = jax.random.split(jax.random.PRNGKey(0), 6)
-trajs = []
-for k in keys:
-    u0 = random_initial_condition(k, tp.space.dof_points)
-    ref = tp.wave_reference(u0, W + total)
-    trajs.append(jnp.concatenate([(u0 * tp.bc.free_mask)[None], ref], 0))
+u0s = jnp.stack(
+    [random_initial_condition(k, tp.space.dof_points) * tp.bc.free_mask
+     for k in keys]
+)
+# one vmapped Newmark-β rollout over all initial conditions (repro.transient)
+refs = batched_rollout(tp.newmark_integrator(), u0s, W + total)
+trajs = [jnp.concatenate([u0s[i][None], refs[i]], 0) for i in range(len(keys))]
 train_trajs, test_trajs = trajs[:4], trajs[4:]
 
 

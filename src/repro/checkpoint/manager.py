@@ -30,7 +30,7 @@ __all__ = ["CheckpointManager"]
 
 
 def _flatten(tree):
-    flat = jax.tree.flatten_with_path(tree)[0]
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
 
     def keystr(path):
         return "/".join(
@@ -122,7 +122,6 @@ class CheckpointManager:
             else:
                 out[key] = jax.numpy.asarray(arr)
         # unflatten along target structure
-        leaves_paths = jax.tree.flatten_with_path(target)
         treedef = jax.tree.structure(target)
         keys = list(_flatten(target).keys())
         return jax.tree.unflatten(treedef, [out[k] for k in keys])

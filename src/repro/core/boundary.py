@@ -45,19 +45,44 @@ class DirichletCondenser:
         self.diag_of_bc = jnp.asarray(diag_of_bc)
         self.free_mask = jnp.asarray(~is_bc, dtype=float)
 
+    def boundary_field(self, values, dtype=None) -> jnp.ndarray:
+        """Expand Dirichlet data to a full ``(num_dofs,)`` field ``u_D``.
+
+        ``values`` may be a scalar, a ``(n_bc,)`` array (one entry per
+        constrained DoF, in ``bc_dofs`` order), or a full ``(num_dofs,)``
+        field whose non-constrained entries are ignored.  Traced values are
+        fine — all branching is on static shapes, so this works per-step
+        inside ``lax.scan`` (time-varying boundary data).
+        """
+        values = jnp.asarray(values, dtype=dtype)
+        u_d = jnp.zeros(self.num_dofs, dtype=values.dtype)
+        if values.ndim == 0:
+            return u_d.at[jnp.asarray(self.bc_dofs)].set(values)
+        if values.shape == (self.bc_dofs.shape[0],):
+            return u_d.at[jnp.asarray(self.bc_dofs)].set(values)
+        if values.shape == (self.num_dofs,):
+            # where(), not multiplication: free-DoF entries must be *ignored*,
+            # even when non-finite (0 * NaN would leak into the lift matvec)
+            return jnp.where(jnp.asarray(self.is_bc), values, 0.0).astype(values.dtype)
+        raise ValueError(f"un-interpretable Dirichlet value shape {values.shape}")
+
+    def lift(self, k: CSR, f: jnp.ndarray, values=0.0) -> jnp.ndarray:
+        """RHS-only condensation: ``F ← F − K u_D`` on free rows, ``F[bc] = g``.
+
+        The matrix half of the condensation (:meth:`apply_matrix_only`) is
+        value-independent, so for time-varying Dirichlet data the condensed
+        matrix is hoisted out of the time loop and only this cheap lift runs
+        per step — no condenser rebuild inside ``lax.scan``.  ``k`` must be
+        the *uncondensed* matrix (the lift needs the constrained columns).
+        """
+        u_d = self.boundary_field(values, dtype=f.dtype)
+        f_lift = (f - k.matvec(u_d)) * self.free_mask
+        bc = jnp.asarray(self.bc_dofs)
+        return f_lift.at[bc].set(u_d[bc])
+
     def apply(self, k: CSR, f: jnp.ndarray, values=0.0) -> tuple[CSR, jnp.ndarray]:
         """Return the condensed system (same sparsity pattern)."""
-        u_d = jnp.zeros(self.num_dofs, dtype=f.dtype)
-        values = jnp.asarray(values)
-        if values.ndim == 0:
-            values = jnp.full(self.bc_dofs.shape, values, dtype=f.dtype)
-        u_d = u_d.at[jnp.asarray(self.bc_dofs)].set(values)
-        # lift: F ← F − K u_D on free rows; F[bc] = values
-        f_lift = (f - k.matvec(u_d)) * self.free_mask
-        f_new = f_lift.at[jnp.asarray(self.bc_dofs)].set(values)
-        vals = k.vals * self.keep_mask.astype(k.vals.dtype)
-        vals = vals.at[self.diag_of_bc].set(1.0)
-        return dataclasses.replace(k, vals=vals), f_new
+        return self.apply_matrix_only(k), self.lift(k, f, values)
 
     def apply_matrix_only(self, k: CSR) -> CSR:
         vals = k.vals * self.keep_mask.astype(k.vals.dtype)

@@ -16,16 +16,21 @@ import jax
 __all__ = ["make_production_mesh", "make_host_mesh"]
 
 
+def _make_mesh(shape, axes):
+    import jax.sharding as jsh
+
+    if hasattr(jsh, "AxisType"):  # jax >= 0.5: explicit-sharding axis types
+        return jax.make_mesh(shape, axes,
+                             axis_types=(jsh.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    import jax.sharding as jsh
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jsh.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over however many (host) devices exist — used by tests."""
-    import jax.sharding as jsh
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jsh.AxisType.Auto, jsh.AxisType.Auto))
+    return _make_mesh((data, model), ("data", "model"))

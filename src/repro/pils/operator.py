@@ -4,29 +4,26 @@
 * Allen–Cahn:      M (Uᵏ⁺¹ − Uᵏ)/Δt + a² K Uᵏ⁺¹ − F(Uᵏ⁺¹) = 0     (Eq. B.19)
 
 The discrete per-step residuals define the TensorPILS operator-learning loss
-(Eq. B.22); reference trajectories come from the same matrices via
-Crank–Nicolson (wave) / backward Euler + Newton (Allen–Cahn).
+(Eq. B.22); reference trajectories come from the same matrices via the
+:mod:`repro.transient` integrators (Newmark-β for the wave equation,
+backward Euler + Newton–Krylov for Allen–Cahn).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..core import (
-    CSR,
     DirichletCondenser,
     FunctionSpace,
     GalerkinAssembler,
-    cg,
-    jacobi_preconditioner,
-    sparse_solve,
 )
 from ..core.mesh import Mesh, element_for_mesh
+from ..transient import NewmarkIntegrator, NewtonKrylovIntegrator
 
 __all__ = [
     "TimeDependentProblem",
@@ -101,77 +98,35 @@ class TimeDependentProblem:
         r = self.mass.matvec((u1 - u0) / self.dt) + self.a2 * self.stiff.matvec(u1) - react
         return r * self.bc.free_mask
 
-    # -- reference integrators --------------------------------------------------
-    def _condensed(self, csr_vals_shift):
-        return self.bc.apply_matrix_only(csr_vals_shift)
-
-    def wave_reference(self, u_init: jnp.ndarray, n_steps: int) -> jnp.ndarray:
+    # -- reference integrators (repro.transient drivers) -------------------------
+    def newmark_integrator(self, **kw) -> NewmarkIntegrator:
         """Newmark-β (β=¼, γ=½ — average acceleration, unconditionally
-        stable, energy-preserving: the paper's 'Crank–Nicolson-style'
-        integrator), zero initial velocity.  Returns (n_steps, N)."""
-        dt, c2 = self.dt, self.c**2
-        beta, gamma = 0.25, 0.5
-        lhs_vals = self.mass.vals + beta * dt**2 * c2 * self.stiff.vals
-        lhs = self._condensed(dataclasses.replace(self.mass, vals=lhs_vals))
-        mpre = jacobi_preconditioner(lhs)
-        mass_c = self._condensed(self.mass)
-        mpre_m = jacobi_preconditioner(mass_c)
+        stable, energy-preserving) over M and c²K."""
+        stiff_c2 = dataclasses.replace(self.stiff, vals=self.c**2 * self.stiff.vals)
+        return NewmarkIntegrator(self.mass, stiff_c2, dt=self.dt, bc=self.bc, **kw)
 
-        u0 = u_init * self.bc.free_mask
-        v0 = jnp.zeros_like(u0)
-        a0, _ = cg(
-            mass_c.matvec, -c2 * self.stiff.matvec(u0) * self.bc.free_mask,
-            m=mpre_m, tol=1e-10, maxiter=2000,
+    def newton_integrator(self, newton_iters: int = 3, **kw) -> NewtonKrylovIntegrator:
+        """Backward Euler + Newton–Krylov for the Allen–Cahn semilinear term."""
+        return NewtonKrylovIntegrator(
+            self.asm, self.mass, self.stiff, dt=self.dt,
+            reaction=lambda u: -self.eps2 * u * (u**2 - 1.0),
+            reaction_prime=lambda u: -self.eps2 * (3 * u**2 - 1.0),
+            diffusion_scale=self.a2, bc=self.bc, newton_iters=newton_iters, **kw,
         )
 
-        @jax.jit
-        def step(carry, _):
-            u, v, a = carry
-            u_star = u + dt * v + 0.5 * dt**2 * (1 - 2 * beta) * a
-            v_star = v + dt * (1 - gamma) * a
-            rhs = -c2 * self.stiff.matvec(u_star) * self.bc.free_mask
-            a_new, _ = cg(lhs.matvec, rhs, m=mpre, tol=1e-10, maxiter=2000)
-            u_new = (u_star + beta * dt**2 * a_new) * self.bc.free_mask
-            v_new = v_star + gamma * dt * a_new
-            return (u_new, v_new, a_new), u_new
-
-        _, traj = jax.lax.scan(step, (u0, v0, a0), None, length=n_steps)
-        return traj
+    def wave_reference(self, u_init: jnp.ndarray, n_steps: int) -> jnp.ndarray:
+        """Newmark-β reference trajectory, zero initial velocity.
+        Returns (n_steps, N)."""
+        return self.newmark_integrator().rollout(
+            u_init * self.bc.free_mask, n_steps
+        )
 
     def ac_reference(self, u_init: jnp.ndarray, n_steps: int,
                      newton_iters: int = 3) -> jnp.ndarray:
         """Backward Euler with Newton (paper B.3.1). Returns (n_steps, N)."""
-        dt = self.dt
-
-        @jax.jit
-        def step(u0, _):
-            u = u0
-
-            def newton(u, _):
-                # residual and Jacobian: J = M/dt + a²K + M[f'(u)] (mass-weighted)
-                res = self.ac_residual(u0, u)
-                # J = M/dt + a²K − M[f'(u)] with f'(u) = −ε²(3u²−1):
-                # the reaction Jacobian is a mass matrix weighted by −f'(u),
-                # assembled through the same Map-Reduce (nodal coefficient).
-                fprime = lambda w: -self.eps2 * (3 * w**2 - 1.0)
-                jac_vals = self.asm._assemble_matrix_vals(-fprime(u), "mass")
-                jac = CSR(
-                    self.mass.vals / dt + self.a2 * self.stiff.vals + jac_vals,
-                    self.mass.indptr, self.mass.indices, self.mass.row_of_nnz,
-                    self.mass.shape, self.mass.diag_pos,
-                )
-                jac = self.bc.apply_matrix_only(jac)
-                du, _ = cg(jac.matvec, res, m=jacobi_preconditioner(jac),
-                           tol=1e-10, maxiter=2000)
-                return u - du, None
-
-            u, _ = jax.lax.scan(newton, u, None, length=newton_iters)
-            u = u * self.bc.free_mask
-            return u, u
-
-        u0 = u_init * self.bc.free_mask
-        _, traj = jax.lax.scan(step, u0, None, length=n_steps)
-        return traj
+        return self.newton_integrator(newton_iters).rollout(
+            u_init * self.bc.free_mask, n_steps
+        )
 
     # -- losses over trajectories (Eq. B.22) -------------------------------------
     def wave_trajectory_loss(self, traj: jnp.ndarray, normalized: bool = False):

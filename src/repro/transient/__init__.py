@@ -1,0 +1,63 @@
+"""repro.transient — differentiable time integration over TensorGalerkin
+operators.
+
+Module map
+----------
+* :mod:`~repro.transient.stepping` — shared rollout machinery:
+  checkpoint-segmented ``lax.scan``, same-pattern CSR combination,
+  matvec-backend dispatch (CSR / ELL / Pallas-ELL).
+* :mod:`~repro.transient.theta` — :class:`ThetaIntegrator`: the θ-method
+  for parabolic problems (θ=1 backward Euler, θ=½ Crank–Nicolson), with
+  per-step time-varying loads and Dirichlet data inside the scan.
+* :mod:`~repro.transient.newmark` — :class:`NewmarkIntegrator`: Newmark-β
+  for second-order hyperbolic problems (β=¼, γ=½ conserves discrete
+  energy — the wave benchmark's integrator).
+* :mod:`~repro.transient.newton` — :class:`NewtonKrylovIntegrator`:
+  backward Euler + Newton–Krylov for semilinear problems, with the
+  reaction term and its exact mass-weighted Jacobian assembled through the
+  Batch-Map + Sparse-Reduce pipeline (Allen–Cahn).
+
+Every rollout is a ``lax.scan`` with O(1) trace size over pre-assembled
+CSR operators; per-step solves go through ``sparse_solve`` (adjoint
+backward pass), so trajectories differentiate w.r.t. coefficients, initial
+conditions, and mesh coordinates.  :func:`batched_rollout` vmaps a rollout
+over a batch of initial conditions; to batch over coefficient fields,
+construct the integrator *inside* the vmapped function::
+
+    def traj(kappa, u0):
+        stiff = asm.assemble_stiffness(kappa)       # traced coefficient
+        integ = ThetaIntegrator(mass, stiff, dt=dt, theta=0.5, bc=bc)
+        return integ.rollout(u0, n_steps)
+
+    trajs = jax.vmap(traj)(kappa_batch, u0_batch)   # (B, T, N)
+"""
+
+from __future__ import annotations
+
+import jax
+
+from .newmark import NewmarkIntegrator
+from .newton import NewtonKrylovIntegrator
+from .stepping import axpy_csr, make_matvec, segmented_scan
+from .theta import BACKWARD_EULER, CRANK_NICOLSON, ThetaIntegrator
+
+__all__ = [
+    "ThetaIntegrator",
+    "NewmarkIntegrator",
+    "NewtonKrylovIntegrator",
+    "BACKWARD_EULER",
+    "CRANK_NICOLSON",
+    "batched_rollout",
+    "segmented_scan",
+    "axpy_csr",
+    "make_matvec",
+]
+
+
+def batched_rollout(integrator, u0_batch, n_steps: int, **rollout_kwargs):
+    """vmap ``integrator.rollout`` over a leading batch of initial
+    conditions: ``(B, N) → (B, n_steps, N)``.  Keyword args (loads,
+    bc_values, checkpoint_every, ...) are shared across the batch."""
+    return jax.vmap(
+        lambda u0: integrator.rollout(u0, n_steps, **rollout_kwargs)
+    )(u0_batch)

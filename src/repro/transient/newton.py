@@ -1,0 +1,112 @@
+"""Newton–Krylov backward-Euler integration for semilinear parabolic
+problems (Allen–Cahn and friends).
+
+Semidiscrete system:  M u̇ + κ K u = R(u), where the reaction load
+``R(u)_a = ∫ r(u) φ_a`` is assembled through the same Batch-Map +
+Sparse-Reduce pipeline (:meth:`GalerkinAssembler.assemble_reaction_load`).
+Each backward-Euler step solves
+
+    G(u) = M (u − uⁿ)/Δt + κ K u − R(u) = 0
+
+by a fixed number of Newton iterations (an inner ``lax.scan`` — fixed
+iteration count keeps the trace O(1) and the rollout reverse-differentiable).
+The Jacobian is exact and sparse-in-pattern:
+
+    J(u) = M/Δt + κ K − M[r′(u)]
+
+where ``M[c]`` is the mass matrix weighted by the nodal coefficient ``c`` —
+re-assembled per iteration through the standard Map-Reduce (it shares the
+mass pattern, so the linear solve reuses the CSR machinery and
+``sparse_solve`` keeps the whole trajectory differentiable).  ``r′`` is
+derived automatically from ``r`` with a pointwise ``jvp`` unless given.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..core.assembly import GalerkinAssembler
+from ..core.boundary import DirichletCondenser
+from ..core.solvers import sparse_solve
+from ..core.sparse import CSR
+from .stepping import axpy_csr, segmented_scan
+
+__all__ = ["NewtonKrylovIntegrator"]
+
+
+def _pointwise_derivative(fn: Callable) -> Callable:
+    """r′(u) for a pointwise nonlinearity, via a ones-tangent jvp."""
+
+    def fprime(u):
+        return jax.jvp(fn, (u,), (jnp.ones_like(u),))[1]
+
+    return fprime
+
+
+@dataclasses.dataclass
+class NewtonKrylovIntegrator:
+    asm: GalerkinAssembler
+    mass: CSR
+    stiff: CSR
+    dt: float
+    reaction: Callable                      # pointwise r(u), e.g. −ε²u(u²−1)
+    reaction_prime: Callable | None = None  # pointwise r′(u); jvp-derived if None
+    diffusion_scale: float = 1.0            # κ multiplying K
+    bc: DirichletCondenser | None = None
+    newton_iters: int = 3
+    solver: str = "cg"                      # J is symmetric (mass-weighted terms)
+    tol: float = 1e-10
+    maxiter: int = 10000
+
+    def __post_init__(self):
+        if self.reaction_prime is None:
+            self.reaction_prime = _pointwise_derivative(self.reaction)
+        # linear part of the Jacobian / residual operator: M/Δt + κK
+        self.lin_op = axpy_csr(1.0 / self.dt, self.mass, self.diffusion_scale, self.stiff)
+
+    def residual(self, u_prev, u):
+        """G(u) at the implicit stage, projected to free DoFs."""
+        react = self.asm.assemble_reaction_load(u, self.reaction)
+        r = (
+            self.mass.matvec((u - u_prev) / self.dt)
+            + self.diffusion_scale * self.stiff.matvec(u)
+            - react
+        )
+        return r if self.bc is None else self.bc.project_residual(r)
+
+    def _jacobian(self, u) -> CSR:
+        # M[−r′(u)] shares the mass pattern: nodal-coefficient mass assembly
+        jac_vals = self.asm.assemble_mass(-self.reaction_prime(u)).vals
+        jac = dataclasses.replace(self.lin_op, vals=self.lin_op.vals + jac_vals)
+        return jac if self.bc is None else self.bc.apply_matrix_only(jac)
+
+    def step(self, u_prev):
+        """One backward-Euler step: ``newton_iters`` Newton updates."""
+
+        def newton(u, _):
+            res = self.residual(u_prev, u)
+            jac = self._jacobian(u)
+            du = sparse_solve(
+                jac, res, self.solver, self.tol, self.tol, self.maxiter
+            )
+            return u - du, None
+
+        u, _ = jax.lax.scan(newton, u_prev, None, length=self.newton_iters)
+        if self.bc is not None:
+            u = u * self.bc.free_mask + u_prev * (1.0 - self.bc.free_mask)
+        return u
+
+    def rollout(self, u0, n_steps: int, *,
+                checkpoint_every: int | None = None) -> jnp.ndarray:
+        """Scan ``n_steps`` implicit steps; returns ``(n_steps, N)``."""
+
+        def body(u, _):
+            u_new = self.step(u)
+            return u_new, u_new
+
+        _, traj = segmented_scan(body, u0, None, n_steps, checkpoint_every)
+        return traj

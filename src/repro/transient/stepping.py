@@ -1,0 +1,87 @@
+"""Shared rollout machinery for the transient integrators.
+
+* :func:`segmented_scan` — ``lax.scan`` with optional ``jax.checkpoint``
+  segmentation: long rollouts are split into segments whose intermediate
+  states are recomputed (not stored) during the backward pass, bounding
+  autodiff memory at O(T/segment + segment) instead of O(T).
+* :func:`axpy_csr` — combine two same-pattern CSR operators into a third
+  (``α·A + β·B``) without touching the static pattern; this is how the
+  θ-method / Newmark effective operators are formed once, outside the loop.
+* :func:`make_matvec` — backend dispatch for the inner matvec: ``"csr"``
+  (gather + sorted segment-sum; differentiable), ``"ell"`` (padded ELLPACK
+  gather, pure jnp), or ``"ell_pallas"`` (the Pallas SpMV kernel —
+  TPU fast path via :func:`repro.kernels.ell_matvec`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..core.sparse import CSR, ELL, csr_to_ell
+
+__all__ = ["segmented_scan", "axpy_csr", "make_matvec", "MATVEC_BACKENDS"]
+
+MATVEC_BACKENDS = ("csr", "ell", "ell_pallas")
+
+
+def segmented_scan(step, init, xs, length: int, checkpoint_every: int | None = None):
+    """``lax.scan(step, init, xs, length)`` with gradient-checkpoint segments.
+
+    ``checkpoint_every=None`` is a plain scan.  Otherwise ``length`` must be
+    divisible by ``checkpoint_every``; the rollout becomes an outer scan over
+    ``length // checkpoint_every`` segments, each an inner scan wrapped in
+    ``jax.checkpoint`` — the O(√T) memory trick for differentiating long
+    trajectories.
+    """
+    if checkpoint_every is None or checkpoint_every >= length:
+        return jax.lax.scan(step, init, xs, length=length)
+    n_seg, rem = divmod(length, checkpoint_every)
+    if rem:
+        raise ValueError(
+            f"checkpoint_every={checkpoint_every} must divide length={length}"
+        )
+    if xs is not None:
+        xs = jax.tree_util.tree_map(
+            lambda x: x.reshape(n_seg, checkpoint_every, *x.shape[1:]), xs
+        )
+
+    @jax.checkpoint
+    def segment(carry, seg_xs):
+        return jax.lax.scan(step, carry, seg_xs, length=checkpoint_every)
+
+    carry, ys = jax.lax.scan(segment, init, xs, length=n_seg)
+    ys = jax.tree_util.tree_map(
+        lambda y: y.reshape(length, *y.shape[2:]), ys
+    )
+    return carry, ys
+
+
+def axpy_csr(alpha, a: CSR, beta, b: CSR) -> CSR:
+    """``α·A + β·B`` for two CSR operators sharing one sparsity pattern."""
+    assert a.indices.shape == b.indices.shape, "CSR patterns must match"
+    return dataclasses.replace(a, vals=alpha * a.vals + beta * b.vals)
+
+
+def make_matvec(op: CSR, backend: str = "csr") -> Callable:
+    """Return ``x ↦ op @ x`` for the chosen inner-loop backend.
+
+    ``"csr"`` keeps the differentiable segment-sum path; ``"ell"`` /
+    ``"ell_pallas"`` convert once to the padded ELLPACK layout (the
+    bounded-valence FEM format) and run the gather either in pure jnp or
+    through the Pallas SpMV kernel.
+    """
+    if backend == "csr":
+        return op.matvec
+    if backend == "ell":
+        ell = csr_to_ell(op)
+        return ell.matvec
+    if backend == "ell_pallas":
+        from ..kernels import ell_matvec
+
+        ell = csr_to_ell(op)
+        return lambda x: ell_matvec(ell, x)
+    raise ValueError(f"unknown matvec backend {backend!r}; use {MATVEC_BACKENDS}")

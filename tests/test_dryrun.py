@@ -21,10 +21,9 @@ from repro.sharding.partitioning import RULES_SINGLE_POD, ShardingRules  # noqa:
 
 
 def _mesh():
-    import jax.sharding as jsh
+    from repro.launch.mesh import make_host_mesh
 
-    return jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jsh.AxisType.Auto,) * 2)
+    return make_host_mesh(4, 2)
 
 
 def _rules():

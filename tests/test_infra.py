@@ -30,10 +30,9 @@ from repro.train.train_step import make_train_state_specs, make_train_step  # no
 
 
 def _mesh(data=4, model=2):
-    import jax.sharding as jsh
+    from repro.launch.mesh import make_host_mesh
 
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jsh.AxisType.Auto,) * 2)
+    return make_host_mesh(data, model)
 
 
 @pytest.fixture(scope="module")

@@ -108,31 +108,44 @@ def test_fused_residual():
 # property-based: kernel invariances (hypothesis)
 # ---------------------------------------------------------------------------
 
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # keep the non-property tests above runnable
+    HAVE_HYPOTHESIS = False
 
 
-@settings(max_examples=20, deadline=None)
-@given(
-    e=st.integers(min_value=1, max_value=300),
-    seed=st.integers(min_value=0, max_value=2**16),
-    scale=st.floats(min_value=0.1, max_value=10.0),
-)
-def test_local_stiffness_properties(e, seed, scale):
-    """Invariances of the P1 stiffness map: symmetry, zero row-sum
-    (constants in kernel), translation invariance, ρ-linearity."""
-    rng = np.random.default_rng(seed)
-    coords = _random_simplices(rng, e, 2, np.float64)
-    rho = jnp.asarray(rng.uniform(0.5, 2.0, size=e))
-    k = batch_map_stiffness(coords, rho, interpret=True)
-    k_np = np.asarray(k)
-    # symmetry
-    np.testing.assert_allclose(k_np, np.swapaxes(k_np, 1, 2), atol=1e-11)
-    # row sums vanish (gradient of constant)
-    np.testing.assert_allclose(k_np.sum(axis=2), 0.0, atol=1e-10)
-    # translation invariance
-    shifted = coords + jnp.asarray(rng.normal(size=(1, 1, 2)))
-    k2 = batch_map_stiffness(shifted, rho, interpret=True)
-    np.testing.assert_allclose(k_np, np.asarray(k2), atol=1e-9)
-    # linearity in rho
-    k3 = batch_map_stiffness(coords, rho * scale, interpret=True)
-    np.testing.assert_allclose(np.asarray(k3), k_np * scale, rtol=1e-10, atol=1e-12)
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        e=st.integers(min_value=1, max_value=300),
+        seed=st.integers(min_value=0, max_value=2**16),
+        scale=st.floats(min_value=0.1, max_value=10.0),
+    )
+    def test_local_stiffness_properties(e, seed, scale):
+        """Invariances of the P1 stiffness map: symmetry, zero row-sum
+        (constants in kernel), translation invariance, ρ-linearity."""
+        rng = np.random.default_rng(seed)
+        coords = _random_simplices(rng, e, 2, np.float64)
+        rho = jnp.asarray(rng.uniform(0.5, 2.0, size=e))
+        k = batch_map_stiffness(coords, rho, interpret=True)
+        k_np = np.asarray(k)
+        # symmetry
+        np.testing.assert_allclose(k_np, np.swapaxes(k_np, 1, 2), atol=1e-11)
+        # row sums vanish (gradient of constant)
+        np.testing.assert_allclose(k_np.sum(axis=2), 0.0, atol=1e-10)
+        # translation invariance
+        shifted = coords + jnp.asarray(rng.normal(size=(1, 1, 2)))
+        k2 = batch_map_stiffness(shifted, rho, interpret=True)
+        np.testing.assert_allclose(k_np, np.asarray(k2), atol=1e-9)
+        # linearity in rho
+        k3 = batch_map_stiffness(coords, rho * scale, interpret=True)
+        np.testing.assert_allclose(np.asarray(k3), k_np * scale, rtol=1e-10, atol=1e-12)
+
+else:
+
+    @pytest.mark.skip(reason="property tests need hypothesis")
+    def test_local_stiffness_properties():
+        pass

@@ -4,6 +4,9 @@ sparse ops, MoE dispatch)."""
 import numpy as np
 import jax
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 import repro.core  # noqa: F401  (x64)

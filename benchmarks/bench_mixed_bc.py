@@ -3,12 +3,16 @@ disk and a non-convex (annulus-sector 'boomerang') domain with an analytic
 solution; derived: relative error (paper band: < 1e-4 on comparable meshes)
 and end-to-end assembly+solve time."""
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import annulus_sector_tri, disk_tri
 from repro.fem import MixedBCPoisson
 
-from .common import emit, time_fn
+try:
+    from .common import emit, time_fn
+except ImportError:  # flat execution: python benchmarks/bench_mixed_bc.py
+    from common import emit, time_fn
 
 
 def _run(mesh, name, r_outer=1.0):
@@ -25,17 +29,19 @@ def _run(mesh, name, r_outer=1.0):
         neumann_pred=lambda c: on_arc(c) & (c[:, 0] > 0),
         robin_pred=lambda c: on_arc(c) & (c[:, 0] <= 0),
     )
-    # u = x is harmonic; BC data chosen to match on each part
+    # u = x is harmonic; BC data chosen to match on each part.  Coefficient
+    # callables must be jax-traceable (jnp, not np): MixedBCPoisson.solve
+    # evaluates them to quadrature arrays before the fused assembly.
     pts = prob.space.dof_points
-    r_at = lambda x: np.sqrt(x[..., 0] ** 2 + x[..., 1] ** 2)
+    r_at = lambda x: jnp.sqrt(x[..., 0] ** 2 + x[..., 1] ** 2)
+    g_n = lambda x: x[..., 0] / r_at(x)
+    g_r = lambda x: x[..., 0] / r_at(x) + x[..., 0]
+    g_d = lambda p: p[:, 0]
 
     def solve():
         return prob.solve(
-            f=0.0,
-            g_neumann=lambda x: x[..., 0] / r_at(x),
-            robin_alpha=1.0,
-            g_robin=lambda x: x[..., 0] / r_at(x) + x[..., 0],
-            dirichlet_values=lambda p: p[:, 0],
+            f=0.0, g_neumann=g_n, robin_alpha=1.0, g_robin=g_r,
+            dirichlet_values=g_d,
         )
 
     res = solve()

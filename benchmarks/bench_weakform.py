@@ -1,0 +1,123 @@
+"""Fused multi-term weak-form assembly vs separate assemble + CSR add.
+
+The composable-form claim: ``assemble(mass(c) + dt·diffusion(rho))`` traces
+one Map + one Reduce, so it must be no slower (expected faster) than the
+shim path ``M = assemble_mass(c); K = assemble_stiffness(rho); M + dt·K``.
+Also measured: a three-term operator (diffusion + advection + mass) and the
+mixed volume+Robin single-CSR assembly.  Derived column: speedup of the
+fused path; JSON rows carry dofs/nnz for trend dashboards.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from .common import emit_json, time_fn
+except ImportError:  # flat execution: python benchmarks/bench_weakform.py
+    from common import emit_json, time_fn
+
+from repro.core import (
+    FacetAssembler,
+    FunctionSpace,
+    GalerkinAssembler,
+    disk_tri,
+    unit_square_tri,
+    weakform as wf,
+)
+from repro.core.mesh import element_for_mesh
+from repro.transient.stepping import axpy_csr
+
+
+def _theta_case(n, dt=1e-3):
+    m = unit_square_tri(n)
+    space = FunctionSpace(m, element_for_mesh(m))
+    asm = GalerkinAssembler(space)
+    rng = np.random.default_rng(0)
+    c = jnp.asarray(rng.uniform(0.5, 2.0, m.num_cells))
+    rho = jnp.asarray(rng.uniform(0.5, 2.0, m.num_cells))
+
+    form = wf.mass(c) + dt * wf.diffusion(rho)
+
+    def fused():
+        return asm.assemble(form).vals
+
+    def separate():
+        return axpy_csr(1.0, asm.assemble_mass(c), dt, asm.assemble_stiffness(rho)).vals
+
+    np.testing.assert_allclose(
+        np.asarray(fused()), np.asarray(separate()), atol=1e-12
+    )
+    t_fused = time_fn(fused)
+    t_sep = time_fn(separate)
+    emit_json(
+        f"weakform_fused_theta_E{m.num_cells}", t_fused,
+        f"separate_us={t_sep:.1f};speedup={t_sep / t_fused:.2f}x",
+        dofs=space.num_dofs, nnz=asm.mat_routing.nnz,
+        separate_us=round(t_sep, 1), n_terms=2,
+    )
+
+
+def _three_term_case(n):
+    m = unit_square_tri(n)
+    space = FunctionSpace(m, element_for_mesh(m))
+    asm = GalerkinAssembler(space)
+    rng = np.random.default_rng(1)
+    rho = jnp.asarray(rng.uniform(0.5, 2.0, m.num_cells))
+    c = jnp.asarray(rng.uniform(0.5, 2.0, m.num_cells))
+    beta = jnp.array([1.0, 0.5])
+
+    form = wf.diffusion(rho) + wf.advection(beta) + wf.mass(c)
+
+    def fused():
+        return asm.assemble(form).vals
+
+    def separate():
+        return (
+            asm.assemble(wf.diffusion(rho)).vals
+            + asm.assemble(wf.advection(beta)).vals
+            + asm.assemble(wf.mass(c)).vals
+        )
+
+    t_fused = time_fn(fused)
+    t_sep = time_fn(separate)
+    emit_json(
+        f"weakform_fused_advdiff_E{m.num_cells}", t_fused,
+        f"separate_us={t_sep:.1f};speedup={t_sep / t_fused:.2f}x",
+        dofs=space.num_dofs, nnz=asm.mat_routing.nnz,
+        separate_us=round(t_sep, 1), n_terms=3,
+    )
+
+
+def _robin_case(n):
+    m = disk_tri(n, center=(0.0, 0.0), radius=1.0)
+    space = FunctionSpace(m, element_for_mesh(m))
+    asm = GalerkinAssembler(space)
+    fa = FacetAssembler(space, m.boundary_facets(), volume_routing=asm.mat_routing)
+
+    form = wf.diffusion() + wf.robin(1.0, on=fa)
+
+    def fused():
+        return asm.assemble(form).vals
+
+    def separate():
+        return fa.add_robin(asm.assemble_stiffness(), 1.0).vals
+
+    t_fused = time_fn(fused)
+    t_sep = time_fn(separate)
+    emit_json(
+        f"weakform_fused_robin_E{m.num_cells}", t_fused,
+        f"separate_us={t_sep:.1f};speedup={t_sep / t_fused:.2f}x",
+        dofs=space.num_dofs, nnz=asm.mat_routing.nnz,
+        separate_us=round(t_sep, 1), n_terms=2,
+    )
+
+
+def main():
+    for n in (32, 64, 128):
+        _theta_case(n)
+    _three_term_case(64)
+    _robin_case(24)
+
+
+if __name__ == "__main__":
+    main()

@@ -11,6 +11,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  Module → paper artifact map:
   bench_topo_opt           — Table 3 (cantilever SIMP)
   bench_kernels            — Pallas kernel microbench (interpret mode)
   bench_transient          — repro.transient rollouts (heat/wave, CSR vs ELL)
+  bench_weakform           — fused multi-term WeakForm assemble vs separate+add
   bench_dryrun_roofline    — harness roofline table (from dry-run JSON)
 """
 
@@ -31,6 +32,7 @@ def main() -> None:
         bench_solver_scaling,
         bench_topo_opt,
         bench_transient,
+        bench_weakform,
     )
 
     modules = [
@@ -44,6 +46,7 @@ def main() -> None:
         bench_topo_opt,
         bench_kernels,
         bench_transient,
+        bench_weakform,
         bench_dryrun_roofline,
     ]
     print("name,us_per_call,derived")

@@ -26,3 +26,12 @@ import numpy as np
 f_batch = jnp.asarray(np.random.default_rng(0).normal(size=(8, problem.space.num_dofs)))
 us, iters = problem.solve_batch(f_batch)
 print(f"batched solve:      {us.shape[0]} RHS in one vmapped call, iters={list(map(int, iters))}")
+
+# composable weak forms: steady advection–diffusion is one fused assembly —
+# diffusion(eps) + advection(beta) — no per-PDE assembler code needed
+from repro.core import unit_square_tri
+from repro.fem import AdvectionDiffusionProblem
+
+ad = AdvectionDiffusionProblem(unit_square_tri(24))
+res3 = ad.solve(eps=0.05, beta=(1.0, 0.5), f=1.0)
+print(f"advection-diffusion: residual {res3.residual:.2e}  max u {float(res3.u.max()):.4f}")

@@ -26,3 +26,5 @@ from .mesh import (  # noqa: E402,F401
 )
 from .solvers import bicgstab, cg, jacobi_preconditioner, sparse_solve  # noqa: E402,F401
 from .sparse import CSR, ELL, csr_to_ell  # noqa: E402,F401
+from . import weakform  # noqa: E402,F401
+from .weakform import WeakForm  # noqa: E402,F401

@@ -3,23 +3,27 @@
 * :func:`geometry_context` — Stage-I geometry: batched Jacobians, closed-form
   inverses/determinants, push-forward gradients (Alg. 1, lines 1–3).
 * :class:`GalerkinAssembler` — owns one mesh topology: quadrature tables,
-  routing (Stage-II precompute), and jit-compiled ``assemble_*`` entry points
-  whose jaxprs contain **no element-indexed Python constructs** — the JAX
-  analogue of the O(1)-graph property.
+  routing (Stage-II precompute), and the jit-cached
+  :meth:`~GalerkinAssembler.assemble` / :meth:`~GalerkinAssembler.assemble_rhs`
+  entry points over :mod:`~repro.core.weakform` forms.  A multi-term form
+  traces **one fused Map** (all volume kernels against a shared geometry
+  context, built inside the jit boundary) and **one Reduce**; facet terms
+  inject into the volume CSR pattern.  Jaxprs contain no element-indexed
+  Python constructs — the JAX analogue of the O(1)-graph property.
+* Deprecated shims ``assemble_stiffness`` / ``assemble_mass`` /
+  ``assemble_elasticity`` / ``assemble_load`` / ``assemble_reaction_load``
+  forward to the form API one term at a time.
 * Baselines for the paper's comparison: a Python per-element scatter-add loop
   (the "white box" of Fig. 1) and a dense ``.at[].add()`` scatter.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import forms
+from . import forms, weakform
 from .elements import get_element
 from .mesh import FunctionSpace, Mesh
 from .routing import MatrixRouting, VectorRouting, build_matrix_routing, build_vector_routing
@@ -220,6 +224,18 @@ class GalerkinAssembler:
         )
         self.vec_routing = build_vector_routing(space.cell_dofs, space.num_dofs)
 
+        # jit cache for the form API: one compiled executable per static form
+        # signature (term kinds × domains × coefficient structure); all
+        # coefficient values are traced leaves.  n_traces counts retraces —
+        # repeated assembly with new coefficient *values* must not grow it.
+        # Callable coefficients are part of the signature (identity-keyed):
+        # per-call lambdas each compile fresh, so the cache is FIFO-bounded —
+        # evicting an entry drops its jit wrapper and with it the compiled
+        # executable — and hot loops should reuse stable function objects.
+        self._form_cache: dict = {}
+        self._form_cache_limit = 128
+        self.n_traces = 0
+
     # -- context -------------------------------------------------------------
     def context(self, coords: jnp.ndarray | None = None) -> forms.FormContext:
         coords = self.coords if coords is None else coords
@@ -239,64 +255,129 @@ class GalerkinAssembler:
             diag_pos=r.diag_pos,
         )
 
-    # -- high-level assembly (jit-cached per instance) -------------------------
-    @partial(jax.jit, static_argnums=(0, 2))
-    def _assemble_matrix_vals(self, coeff, form_name: str, coords=None, lam=0.0, mu=0.0):
-        ctx = self.context(coords)
-        if form_name == "diffusion":
-            k_local = forms.diffusion(ctx, coeff)
-        elif form_name == "mass":
-            k_local = forms.mass(ctx, coeff)
-        elif form_name == "elasticity":
-            k_local = forms.elasticity(ctx, lam, mu, scale=coeff)
-        else:
-            raise ValueError(form_name)
-        return reduce_matrix(k_local, self.mat_routing, self.reduce_mode)
+    # -- form API: one fused Map, one Reduce, jit-cached per signature --------
+    def assemble(self, form, coords=None) -> CSR:
+        """Assemble a bilinear :class:`~repro.core.weakform.WeakForm` into a
+        CSR on the volume pattern.
 
-    def _prep_coeff(self, coeff, coords=None):
-        """Callables can't be traced jit args — pre-evaluate to (E, Q)."""
-        if callable(coeff):
+        All volume terms are evaluated in **one fused Map** against a shared
+        geometry context (built from ``coords`` inside the jit boundary),
+        summed element-wise, and reduced **once**; facet terms (e.g.
+        ``robin(alpha, on=facets)``) reduce through their facet routing and
+        are injected into the volume CSR pattern.  Coefficients and scale
+        factors are traced — a θ-step ``mass(c) + dt*diffusion(kappa)`` or a
+        SIMP-interpolated ``elasticity(lam, mu, scale=rho**p)`` compiles one
+        XLA executable reused across coefficient values.
+        """
+        return self.csr(self._assemble_vals(form, weakform.MATRIX, coords))
+
+    def assemble_rhs(self, form, coords=None) -> jnp.ndarray:
+        """Assemble a linear form (``source`` / ``neumann`` / ``reaction``
+        terms) into a global ``(num_dofs,)`` vector — same fused pipeline."""
+        return self._assemble_vals(form, weakform.VECTOR, coords)
+
+    def _assemble_vals(self, form, arity: str, coords=None):
+        spec, leaves = weakform.lower(form, arity)
+        if coords is not None and any(domain is not None for _, domain, _ in spec):
+            # facet geometry comes from the FacetAssembler's construction-time
+            # coords; silently mixing it with overridden volume coords would
+            # give inconsistent values and zero boundary coordinate gradients
+            raise NotImplementedError(
+                "assemble(form, coords=...) does not support facet terms: "
+                "boundary geometry is fixed at FacetAssembler construction"
+            )
+        fn = self._form_cache.get((arity, spec))
+        if fn is None:
+            while len(self._form_cache) >= self._form_cache_limit:
+                self._form_cache.pop(next(iter(self._form_cache)))
+            fn = self._build_form_fn(spec, arity)
+            self._form_cache[(arity, spec)] = fn
+        return fn(leaves, self.coords if coords is None else coords)
+
+    def _build_form_fn(self, spec, arity: str):
+        """Close over one static form signature; jit over (leaves, coords)."""
+        vs = self.space.value_size
+        # facet-domain precompute (numpy, once per signature): injection of
+        # each facet pattern into the volume CSR pattern
+        injections = {}
+        for _, domain, _ in spec:
+            if domain is not None and arity == weakform.MATRIX:
+                if domain not in injections:
+                    injections[domain] = jnp.asarray(
+                        domain.injection_into(self.mat_routing)
+                    )
+
+        def run(leaves, coords):
+            self.n_traces += 1
             ctx = self.context(coords)
-            return forms.eval_coefficient(coeff, ctx)
-        return coeff
+            leaf = iter(leaves)
+            facet_ctxs: dict = {}
+            local_sum = None            # fused volume Map accumulator
+            facet_sums: dict = {}       # domain -> facet Map accumulator
+            for kind, domain, desc in spec:
+                vals = [next(leaf) if d == weakform.TRACED else d[1] for d in desc]
+                *coeffs, scale = vals
+                if domain is None:
+                    tctx = ctx
+                else:
+                    if domain not in facet_ctxs:
+                        facet_ctxs[domain] = domain.context()
+                    tctx = facet_ctxs[domain]
+                kern = weakform.KERNELS[kind].fn
+                local = kern(tctx, vs, *coeffs) * jnp.asarray(scale)
+                if domain is None:
+                    if local_sum is not None and local_sum.shape != local.shape:
+                        raise ValueError(
+                            f"term '{kind}' local shape {local.shape} does not "
+                            f"match earlier terms {local_sum.shape} — scalar "
+                            "and vector-valued kernels cannot be fused"
+                        )
+                    local_sum = local if local_sum is None else local_sum + local
+                else:
+                    prev = facet_sums.get(domain)
+                    facet_sums[domain] = local if prev is None else prev + local
 
+            if arity == weakform.MATRIX:
+                out = (
+                    reduce_matrix(local_sum, self.mat_routing, self.reduce_mode)
+                    if local_sum is not None
+                    else jnp.zeros((self.mat_routing.nnz,))
+                )
+                for domain, loc in facet_sums.items():
+                    fvals = reduce_matrix(loc, domain.mat_routing, self.reduce_mode)
+                    out = out.at[injections[domain]].add(fvals.astype(out.dtype))
+                return out
+            out = (
+                reduce_vector(local_sum, self.vec_routing, self.reduce_mode)
+                if local_sum is not None
+                else jnp.zeros((self.space.num_dofs,))
+            )
+            for domain, loc in facet_sums.items():
+                out = out + reduce_vector(loc, domain.vec_routing, self.reduce_mode)
+            return out
+
+        return jax.jit(run)
+
+    # -- deprecated shims over the form API -----------------------------------
     def assemble_stiffness(self, rho=None, coords=None) -> CSR:
-        rho = self._prep_coeff(rho, coords)
-        return self.csr(self._assemble_matrix_vals(rho, "diffusion", coords))
+        """Deprecated: use ``assemble(weakform.diffusion(rho))``."""
+        return self.assemble(weakform.diffusion(rho), coords)
 
     def assemble_mass(self, c=None, coords=None) -> CSR:
-        c = self._prep_coeff(c, coords)
-        return self.csr(self._assemble_matrix_vals(c, "mass", coords))
+        """Deprecated: use ``assemble(weakform.mass(c))``."""
+        return self.assemble(weakform.mass(c), coords)
 
     def assemble_elasticity(self, lam: float, mu: float, scale=None, coords=None) -> CSR:
-        scale = self._prep_coeff(scale, coords)
-        return self.csr(
-            self._assemble_matrix_vals(scale, "elasticity", coords, lam=lam, mu=mu)
-        )
-
-    @partial(jax.jit, static_argnums=(0,))
-    def _assemble_load_vals(self, f, coords=None):
-        ctx = self.context(coords)
-        if self.space.value_size == 1:
-            f_local = forms.load(ctx, f)
-        else:
-            f_local = forms.vector_load(ctx, f, self.space.value_size)
-        return reduce_vector(f_local, self.vec_routing, self.reduce_mode)
+        """Deprecated: use ``assemble(weakform.elasticity(lam, mu, scale))``."""
+        return self.assemble(weakform.elasticity(lam, mu, scale), coords)
 
     def assemble_load(self, f=None, coords=None) -> jnp.ndarray:
-        # callables can't cross the jit boundary as traced values — evaluate
-        # them to (E, Q) here (still jit-compiled downstream).
-        if callable(f):
-            ctx = self.context(coords)
-            f = forms.eval_coefficient(f, ctx, vector_size=(
-                self.space.value_size if self.space.value_size > 1 else None))
-        return self._assemble_load_vals(f, coords)
+        """Deprecated: use ``assemble_rhs(weakform.source(f))``."""
+        return self.assemble_rhs(weakform.source(f), coords)
 
     def assemble_reaction_load(self, u_nodal, fn) -> jnp.ndarray:
-        """Semi-linear term F_nonlin(U) (Allen–Cahn): same Map-Reduce path."""
-        ctx = self.context(None)
-        f_local = forms.nonlinear_reaction(ctx, u_nodal, fn)
-        return reduce_vector(f_local, self.vec_routing, self.reduce_mode)
+        """Deprecated: use ``assemble_rhs(weakform.reaction(u_nodal, fn))``."""
+        return self.assemble_rhs(weakform.reaction(u_nodal, fn))
 
     # -- baselines (paper Fig. 1 "white box") ----------------------------------
     def assemble_stiffness_scatter(self, rho=None) -> jnp.ndarray:

@@ -99,7 +99,15 @@ class FacetAssembler:
     the *volume* DoF numbering, so their reduce lands directly in the global
     system.  For matrix terms, the facet routing is built over the same
     ``num_dofs`` and merged CSR patterns are avoided by assembling into the
-    volume pattern via an injection map (facet-nnz -> volume-nnz)."""
+    volume pattern via an injection map (facet-nnz -> volume-nnz).
+
+    A ``FacetAssembler`` is also the *integration domain* of boundary terms
+    in the weak-form API — ``weakform.robin(alpha, on=fa)`` /
+    ``weakform.neumann(g, on=fa)`` — where :meth:`context` supplies the
+    facet geometry inside the fused assembly trace and
+    :meth:`injection_into` supplies the nnz injection into the volume
+    pattern of the assembling :class:`~repro.core.assembly.GalerkinAssembler`.
+    """
 
     def __init__(self, space: FunctionSpace, facets: np.ndarray,
                  volume_routing=None, quad_order: int | None = None):
@@ -117,14 +125,25 @@ class FacetAssembler:
         self.coords = jnp.asarray(mesh.points[self.facets])    # (F, 2, d)
         self.vec_routing = build_vector_routing(self.facets, space.num_dofs)
         self.mat_routing = build_matrix_routing(self.facets, None, space.num_dofs)
+        self._injections: dict = {}    # id(volume_routing) -> (routing, pos)
         self._vol_injection = None
         if volume_routing is not None:
-            # map each facet-pattern nnz (r, c) to its slot in the volume CSR
-            vol_key = volume_routing.row_of_nnz * space.num_dofs + volume_routing.indices
-            fac_key = self.mat_routing.row_of_nnz * space.num_dofs + self.mat_routing.indices
-            pos = np.searchsorted(vol_key, fac_key)
-            assert np.all(vol_key[pos] == fac_key), "facet entry outside volume pattern"
-            self._vol_injection = pos
+            self._vol_injection = self.injection_into(volume_routing)
+
+    def injection_into(self, volume_routing) -> np.ndarray:
+        """Positions of this facet pattern's nnz inside a volume CSR pattern
+        (precomputed numpy, cached per volume routing)."""
+        hit = self._injections.get(id(volume_routing))
+        if hit is not None:
+            return hit[1]
+        n = self.space.num_dofs
+        vol_key = volume_routing.row_of_nnz * n + volume_routing.indices
+        fac_key = self.mat_routing.row_of_nnz * n + self.mat_routing.indices
+        pos = np.searchsorted(vol_key, fac_key)
+        assert np.all(vol_key[pos] == fac_key), "facet entry outside volume pattern"
+        # keep the routing alive so the id() key stays unique
+        self._injections[id(volume_routing)] = (volume_routing, pos)
+        return pos
 
     def context(self) -> forms.FormContext:
         return facet_context(

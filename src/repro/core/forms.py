@@ -12,22 +12,32 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable
 
+import jax
 import jax.numpy as jnp
 
 __all__ = [
     "FormContext",
     "eval_coefficient",
+    "eval_tensor_coefficient",
     "diffusion",
+    "anisotropic_diffusion",
+    "advection",
     "mass",
     "elasticity",
     "load",
     "vector_load",
+    "nonlinear_reaction",
 ]
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class FormContext:
-    """Batched geometry at quadrature points (the paper's 𝒢, 𝒥, 𝒳̂, Ŵ)."""
+    """Batched geometry at quadrature points (the paper's 𝒢, 𝒥, 𝒳̂, Ŵ).
+
+    Frozen and registered as a jax pytree (all fields are leaves), so a
+    context crosses jit/vmap boundaries cleanly — batched transient
+    rollouts can close over one context instead of rebuilding it per trace.
+    """
 
     w: jnp.ndarray          # (Q,) reference weights
     phi: jnp.ndarray        # (Q, k) basis values
@@ -40,6 +50,13 @@ class FormContext:
     def wdet(self) -> jnp.ndarray:
         """(E, Q) combined quadrature × measure weights ŵ_q |det J|."""
         return self.w[None, :] * self.detj
+
+
+jax.tree_util.register_dataclass(
+    FormContext,
+    data_fields=["w", "phi", "detj", "grad", "xq", "scalar_cell_dofs"],
+    meta_fields=[],
+)
 
 
 def eval_coefficient(coef, ctx: FormContext, vector_size: int | None = None):
@@ -77,6 +94,28 @@ def eval_coefficient(coef, ctx: FormContext, vector_size: int | None = None):
     raise ValueError(f"un-interpretable coefficient shape {coef.shape}")
 
 
+def eval_tensor_coefficient(coef, ctx: FormContext, d: int):
+    """Evaluate a (d, d) tensor coefficient at quadrature points → (E, Q, d, d).
+
+    Accepted encodings: ``None`` → identity, ``(d, d)`` constant,
+    ``(E, d, d)`` per-element, ``(E, Q, d, d)`` per-quadrature, or a
+    callable of x returning ``(E, Q, d, d)``.
+    """
+    e, q = ctx.detj.shape
+    if coef is None:
+        return jnp.broadcast_to(jnp.eye(d), (e, q, d, d))
+    if callable(coef):
+        coef = coef(ctx.xq)
+    coef = jnp.asarray(coef)
+    if coef.shape == (d, d):
+        return jnp.broadcast_to(coef, (e, q, d, d))
+    if coef.shape == (e, d, d):
+        return jnp.broadcast_to(coef[:, None], (e, q, d, d))
+    if coef.shape == (e, q, d, d):
+        return coef
+    raise ValueError(f"un-interpretable tensor coefficient shape {coef.shape}")
+
+
 # ---------------------------------------------------------------------------
 # Bilinear forms → (E, k, k)
 # ---------------------------------------------------------------------------
@@ -87,6 +126,28 @@ def diffusion(ctx: FormContext, rho=None) -> jnp.ndarray:
     # single fused contraction: (K_local)_{eab} = Σ_q ŵ_q|detJ| ρ G_a·G_b
     return jnp.einsum(
         "eq,eq,eqai,eqbi->eab", ctx.wdet, rho_q, ctx.grad, ctx.grad,
+        optimize=True,
+    )
+
+
+def anisotropic_diffusion(ctx: FormContext, a=None) -> jnp.ndarray:
+    """∫ (A∇u)·∇v with a (d, d) tensor coefficient A (heterogeneous /
+    anisotropic media); A = I reduces to :func:`diffusion`."""
+    d = ctx.grad.shape[-1]
+    a_q = eval_tensor_coefficient(a, ctx, d)
+    return jnp.einsum(
+        "eq,eqai,eqij,eqbj->eab", ctx.wdet, ctx.grad, a_q, ctx.grad,
+        optimize=True,
+    )
+
+
+def advection(ctx: FormContext, beta) -> jnp.ndarray:
+    """∫ (β·∇u) v — the (nonsymmetric) advection bilinear form:
+    K_ab = Σ_q ŵ|detJ| φ_a (β·𝒢_b)."""
+    d = ctx.grad.shape[-1]
+    b_q = eval_coefficient(beta, ctx, vector_size=d)      # (E, Q, d)
+    return jnp.einsum(
+        "eq,qa,eqi,eqbi->eab", ctx.wdet, ctx.phi, b_q, ctx.grad,
         optimize=True,
     )
 

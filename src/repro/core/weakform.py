@@ -1,0 +1,246 @@
+"""Composable weak-form API: declarative terms over the Map-Reduce pipeline.
+
+A :class:`WeakForm` is a sum of :class:`Term` objects — each a (kernel,
+coefficient-spec) pair tagged with an integration domain (volume cells by
+default, a :class:`~repro.core.boundary.FacetAssembler` for boundary terms).
+Forms are closed under ``+`` and scalar scaling, so PDE operators compose
+declaratively::
+
+    from repro.core import weakform as wf
+
+    form = wf.diffusion(rho) + wf.advection(beta) + wf.mass(c) \
+         + wf.robin(alpha, on=facets)
+    K = asm.assemble(form)                    # ONE fused Map, ONE Reduce
+    F = asm.assemble_rhs(wf.source(f) + wf.neumann(g, on=facets))
+
+:meth:`GalerkinAssembler.assemble` traces one fused Map stage evaluating
+every volume term against a shared :class:`~repro.core.forms.FormContext`
+(geometry built once, *inside* the jit boundary), accumulates the local
+element matrices term-wise, and performs a single Sparse-Reduce; facet
+terms reduce through their own facet routing and land in the volume CSR
+pattern via a precomputed nnz-injection — mixed volume+boundary forms
+yield one CSR from one XLA executable.
+
+Lowering splits a form into a **static signature** (term kinds, domains,
+which coefficient slots are traced vs. static) and a flat tuple of
+**traced leaves** (arrays / scalars — coefficients, scale factors).  The
+assembler's jit cache is keyed on the signature, so re-assembling with new
+coefficient *values* (a SIMP density update, a new θ-step ``dt``) reuses
+the compiled executable.  ``None`` and callable coefficients are static:
+callables are evaluated at quadrature points inside the trace, so **reuse
+the same function object across calls** to reuse the executable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+from . import forms
+
+__all__ = [
+    "Term",
+    "WeakForm",
+    "KERNELS",
+    "lower",
+    "diffusion",
+    "anisotropic_diffusion",
+    "advection",
+    "mass",
+    "elasticity",
+    "robin",
+    "source",
+    "neumann",
+    "reaction",
+]
+
+MATRIX = "matrix"
+VECTOR = "vector"
+
+TRACED = "traced"  # marker for a coefficient slot carried as a jit leaf
+
+
+@dataclasses.dataclass(frozen=True)
+class _Kernel:
+    """arity + the local Map: ``fn(ctx, value_size, *coeffs) -> (E,k,k)|(E,k)``."""
+
+    arity: str
+    fn: Callable
+
+
+def _source_kernel(ctx, vs, f):
+    return forms.load(ctx, f) if vs == 1 else forms.vector_load(ctx, f, vs)
+
+
+KERNELS: dict[str, _Kernel] = {
+    "diffusion": _Kernel(MATRIX, lambda ctx, vs, rho: forms.diffusion(ctx, rho)),
+    "anisotropic_diffusion": _Kernel(
+        MATRIX, lambda ctx, vs, a: forms.anisotropic_diffusion(ctx, a)
+    ),
+    "advection": _Kernel(MATRIX, lambda ctx, vs, beta: forms.advection(ctx, beta)),
+    "mass": _Kernel(MATRIX, lambda ctx, vs, c: forms.mass(ctx, c)),
+    "elasticity": _Kernel(
+        MATRIX, lambda ctx, vs, lam, mu, scale: forms.elasticity(ctx, lam, mu, scale=scale)
+    ),
+    "source": _Kernel(VECTOR, _source_kernel),
+    "reaction": _Kernel(
+        VECTOR, lambda ctx, vs, u, fn: forms.nonlinear_reaction(ctx, u, fn)
+    ),
+}
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Term:
+    """One (kernel, coefficient-spec) pair on one integration domain.
+
+    ``domain is None`` integrates over the mesh cells; a ``FacetAssembler``
+    integrates over its boundary facets (the reduce injects into the volume
+    CSR pattern).  ``scale`` is a scalar factor — traced, so ``dt * form``
+    re-uses the compiled executable across ``dt`` values.
+    """
+
+    kind: str
+    coeffs: tuple
+    domain: Any = None
+    scale: Any = 1.0
+
+    @property
+    def arity(self) -> str:
+        return KERNELS[self.kind].arity
+
+    def scaled(self, s) -> "Term":
+        return dataclasses.replace(self, scale=s * self.scale)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class WeakForm:
+    """A sum of terms, closed under ``+``, ``-`` and scalar scaling."""
+
+    terms: tuple[Term, ...] = ()
+
+    def __add__(self, other):
+        other = _as_form(other)
+        if other is NotImplemented:
+            return NotImplemented
+        return WeakForm(self.terms + other.terms)
+
+    def __radd__(self, other):
+        if isinstance(other, (int, float)) and other == 0:
+            return self  # sum([...]) support
+        return self.__add__(other)
+
+    def __sub__(self, other):
+        other = _as_form(other)
+        if other is NotImplemented:
+            return NotImplemented
+        return self + (-1.0) * other
+
+    def __mul__(self, s):
+        if isinstance(s, (WeakForm, Term)):
+            return NotImplemented  # forms scale by scalars; use + to combine
+        return WeakForm(tuple(t.scaled(s) for t in self.terms))
+
+    __rmul__ = __mul__
+
+    def __neg__(self):
+        return (-1.0) * self
+
+
+def _as_form(obj) -> WeakForm:
+    if isinstance(obj, WeakForm):
+        return obj
+    if isinstance(obj, Term):
+        return WeakForm((obj,))
+    return NotImplemented
+
+
+def lower(form, arity: str):
+    """Split a form into its static signature and traced leaves.
+
+    Returns ``(spec, leaves)`` where ``spec`` is a hashable tuple of
+    ``(kind, domain, coeff_descriptors)`` per term — ``coeff_descriptors``
+    marks each slot (coefficients + trailing scale) as either :data:`TRACED`
+    or ``("static", obj)`` (``None`` / callables) — and ``leaves`` is the
+    flat tuple of traced values in slot order.  ``spec`` is the jit-cache
+    key; ``leaves`` cross the jit boundary as pytree leaves.
+    """
+    form = _as_form(form)
+    if form is NotImplemented:
+        raise TypeError(f"expected a WeakForm or Term, got {type(form).__name__}")
+    if not form.terms:
+        raise ValueError("cannot assemble an empty WeakForm")
+    spec, leaves = [], []
+    for t in form.terms:
+        if t.arity != arity:
+            raise TypeError(
+                f"term '{t.kind}' is a {t.arity} form; "
+                f"{'assemble' if arity == MATRIX else 'assemble_rhs'} takes "
+                f"{arity} forms only"
+            )
+        desc = []
+        for c in (*t.coeffs, t.scale):
+            if c is None or callable(c):
+                desc.append(("static", c))
+            else:
+                desc.append(TRACED)
+                leaves.append(c)
+        spec.append((t.kind, t.domain, tuple(desc)))
+    return tuple(spec), tuple(leaves)
+
+
+# ---------------------------------------------------------------------------
+# term constructors (the user-facing vocabulary)
+# ---------------------------------------------------------------------------
+
+def diffusion(rho=None) -> WeakForm:
+    """∫ ρ ∇u·∇v — scalar (or ``None`` → unit) coefficient."""
+    return WeakForm((Term("diffusion", (rho,)),))
+
+
+def anisotropic_diffusion(a) -> WeakForm:
+    """∫ (A∇u)·∇v — tensor coefficient: ``(d,d)`` constant, ``(E,d,d)``
+    per-element, ``(E,Q,d,d)`` per-quadrature, or a callable of x."""
+    return WeakForm((Term("anisotropic_diffusion", (a,)),))
+
+
+def advection(beta) -> WeakForm:
+    """∫ (β·∇u) v — nonsymmetric; β is a ``(d,)`` constant, ``(E,Q,d)``
+    array, or a callable of x."""
+    return WeakForm((Term("advection", (beta,)),))
+
+
+def mass(c=None) -> WeakForm:
+    """∫ c u v (reaction / L² term)."""
+    return WeakForm((Term("mass", (c,)),))
+
+
+def elasticity(lam, mu, scale=None) -> WeakForm:
+    """∫ σ(u):ε(v) with Lamé (λ, μ); ``scale`` is the per-element SIMP
+    interpolation E(ρ) (λ, μ and scale are all traced)."""
+    return WeakForm((Term("elasticity", (lam, mu, scale)),))
+
+
+def robin(alpha=None, *, on) -> WeakForm:
+    """∫_Γ α u v over the facets of ``on`` (a FacetAssembler built with the
+    volume routing) — reduces into the volume CSR pattern."""
+    if on is None:
+        raise ValueError("robin(...) needs on=<FacetAssembler>")
+    return WeakForm((Term("mass", (alpha,), domain=on),))
+
+
+def source(f=None) -> WeakForm:
+    """∫ f v — volume load (vector-valued on vector spaces)."""
+    return WeakForm((Term("source", (f,)),))
+
+
+def neumann(g=None, *, on) -> WeakForm:
+    """∫_Γ g v over the facets of ``on`` — boundary load."""
+    if on is None:
+        raise ValueError("neumann(...) needs on=<FacetAssembler>")
+    return WeakForm((Term("source", (g,), domain=on),))
+
+
+def reaction(u_nodal, fn: Callable) -> WeakForm:
+    """Semi-linear load ∫ fn(u) v with nodal coefficients ``u_nodal``
+    (``fn`` is static — reuse one function object across calls)."""
+    return WeakForm((Term("reaction", (u_nodal, fn)),))

@@ -1,4 +1,5 @@
 from .tensormesh import (  # noqa: F401
+    AdvectionDiffusionProblem,
     ElasticityProblem,
     MixedBCPoisson,
     PoissonProblem,

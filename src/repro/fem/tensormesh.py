@@ -24,10 +24,17 @@ from ..core import (
     bicgstab,
     cg,
     jacobi_preconditioner,
+    weakform as wf,
 )
+from ..core import forms
 from ..core.mesh import Mesh, element_for_mesh
 
-__all__ = ["PoissonProblem", "ElasticityProblem", "MixedBCPoisson"]
+__all__ = [
+    "PoissonProblem",
+    "AdvectionDiffusionProblem",
+    "ElasticityProblem",
+    "MixedBCPoisson",
+]
 
 
 @dataclasses.dataclass
@@ -64,8 +71,8 @@ class PoissonProblem(_ProblemBase):
         self.bc = DirichletCondenser(self.asm, self.space.boundary_dofs())
 
     def assemble(self, rho=None, f=1.0):
-        k = self.asm.assemble_stiffness(rho)
-        load = self.asm.assemble_load(f)
+        k = self.asm.assemble(wf.diffusion(rho))
+        load = self.asm.assemble_rhs(wf.source(f))
         return self.bc.apply(k, load)
 
     def solve(self, rho=None, f=1.0, tol=1e-10):
@@ -76,13 +83,13 @@ class PoissonProblem(_ProblemBase):
     def solve_batch(self, f_batch: jnp.ndarray, rho=None, tol=1e-10, maxiter=2000):
         """Solve K u_b = F(f_b) for a batch of nodal source fields
         ``f_batch: (B, num_dofs)`` — assembly amortized, solve vmapped."""
-        k = self.bc.apply_matrix_only(self.asm.assemble_stiffness(rho))
+        k = self.bc.apply_matrix_only(self.asm.assemble(wf.diffusion(rho)))
         m = jacobi_preconditioner(k)
 
         @jax.jit
         def run(fb):
             def solve_one(f_nodal):
-                load = self.asm.assemble_load(f_nodal)
+                load = self.asm.assemble_rhs(wf.source(f_nodal))
                 load = self.bc.project_residual(load)
                 u, info = cg(k.matvec, load, m=m, tol=tol, maxiter=maxiter)
                 return u, info.iters
@@ -90,6 +97,32 @@ class PoissonProblem(_ProblemBase):
             return jax.vmap(solve_one)(fb)
 
         return run(f_batch)
+
+
+class AdvectionDiffusionProblem(_ProblemBase):
+    """−∇·(ε∇u) + β·∇u = f with Dirichlet BCs — the steady nonsymmetric
+    problem the composable weak-form API unlocks: no assembler edits, just
+    ``diffusion(eps) + advection(beta)`` (BiCGStab since K is nonsymmetric).
+    """
+
+    method = "bicgstab"
+
+    def __init__(self, mesh: Mesh, degree: int = 1, quad_order: int | None = None):
+        self.mesh = mesh
+        self.space = FunctionSpace(mesh, element_for_mesh(mesh, degree))
+        self.asm = GalerkinAssembler(self.space, quad_order)
+        self.bc = DirichletCondenser(self.asm, self.space.boundary_dofs())
+
+    def assemble(self, eps=1.0, beta=(1.0, 0.0), f=1.0, dirichlet_values=0.0):
+        form = wf.diffusion(eps) + wf.advection(jnp.asarray(beta))
+        k = self.asm.assemble(form)
+        load = self.asm.assemble_rhs(wf.source(f))
+        return self.bc.apply(k, load, dirichlet_values)
+
+    def solve(self, eps=1.0, beta=(1.0, 0.0), f=1.0, dirichlet_values=0.0,
+              tol=1e-10):
+        k, load = self.assemble(eps, beta, f, dirichlet_values)
+        return self._solve_system(k, load, tol)
 
 
 class ElasticityProblem(_ProblemBase):
@@ -109,8 +142,8 @@ class ElasticityProblem(_ProblemBase):
     def assemble(self, body_force=None, scale=None):
         d = self.mesh.dim
         bf = jnp.ones(d) if body_force is None else jnp.asarray(body_force)
-        k = self.asm.assemble_elasticity(self.lam, self.mu, scale=scale)
-        f = self.asm.assemble_load(bf)
+        k = self.asm.assemble(wf.elasticity(self.lam, self.mu, scale=scale))
+        f = self.asm.assemble_rhs(wf.source(bf))
         return self.bc.apply(k, f)
 
     def solve(self, body_force=None, tol=1e-10):
@@ -154,17 +187,38 @@ class MixedBCPoisson(_ProblemBase):
             if len(self.r_facets)
             else None
         )
+        # quadrature contexts, built once: per-solve callables are evaluated
+        # on them *eagerly* so they enter the fused assembly as traced array
+        # leaves — fresh lambdas per solve() reuse one compiled executable
+        self._vol_ctx = self.asm.context()
+        self._ctx_n = self._fa_n.context() if self._fa_n is not None else None
+        self._ctx_r = self._fa_r.context() if self._fa_r is not None else None
 
     def solve(self, f, g_neumann=None, robin_alpha=1.0, g_robin=None,
               dirichlet_values=None, rho=None, tol=1e-10):
-        k = self.asm.assemble_stiffness(rho)
-        load = self.asm.assemble_load(f)
-        if self._fa_n is not None and g_neumann is not None:
-            load = load + self._fa_n.neumann_load(g_neumann)
+        # mixed volume + boundary form → ONE CSR from one fused assembly
+        # (Robin facet terms inject into the volume pattern), and one fused
+        # RHS over volume source + Neumann/Robin boundary loads.  Callables
+        # are pre-evaluated to quadrature arrays (traced leaves) so per-call
+        # lambdas don't recompile the fused executable.
+        if callable(rho):
+            rho = forms.eval_coefficient(rho, self._vol_ctx)
+        if callable(f):
+            f = forms.eval_coefficient(f, self._vol_ctx)
+        form = wf.diffusion(rho)
+        rhs = wf.source(f)
         if self._fa_r is not None:
-            k = self._fa_r.add_robin(k, robin_alpha)
+            form = form + wf.robin(robin_alpha, on=self._fa_r)
             if g_robin is not None:
-                load = load + self._fa_r.neumann_load(g_robin)
+                if callable(g_robin):
+                    g_robin = forms.eval_coefficient(g_robin, self._ctx_r)
+                rhs = rhs + wf.neumann(g_robin, on=self._fa_r)
+        if self._fa_n is not None and g_neumann is not None:
+            if callable(g_neumann):
+                g_neumann = forms.eval_coefficient(g_neumann, self._ctx_n)
+            rhs = rhs + wf.neumann(g_neumann, on=self._fa_n)
+        k = self.asm.assemble(form)
+        load = self.asm.assemble_rhs(rhs)
         bvals = 0.0
         if dirichlet_values is not None:
             d_dofs = self.bc.bc_dofs

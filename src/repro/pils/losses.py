@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import DirichletCondenser, GalerkinAssembler
+from ..core import DirichletCondenser, GalerkinAssembler, weakform as wf
 from ..core.assembly import reduce_vector
 
 __all__ = [
@@ -116,8 +116,8 @@ class GalerkinResidualLoss:
 
     def __init__(self, asm: GalerkinAssembler, bc: DirichletCondenser,
                  rho=None, f=1.0):
-        k = asm.assemble_stiffness(rho)
-        load = asm.assemble_load(f)
+        k = asm.assemble(wf.diffusion(rho))
+        load = asm.assemble_rhs(wf.source(f))
         self.k, self.f = bc.apply(k, load)
         self.bc = bc
         self.dof_points = jnp.asarray(asm.space.dof_points)

@@ -21,6 +21,7 @@ from ..core import (
     DirichletCondenser,
     FunctionSpace,
     GalerkinAssembler,
+    weakform as wf,
 )
 from ..core.mesh import Mesh, element_for_mesh
 from ..transient import NewmarkIntegrator, NewtonKrylovIntegrator
@@ -64,10 +65,12 @@ class TimeDependentProblem:
         self.asm = GalerkinAssembler(self.space)
         bdofs = self.space.boundary_dofs()
         self.bc = DirichletCondenser(self.asm, bdofs)
-        self.mass = self.asm.assemble_mass()
-        self.stiff = self.asm.assemble_stiffness()
+        self.mass = self.asm.assemble(wf.mass())
+        self.stiff = self.asm.assemble(wf.diffusion())
         self.interior = jnp.asarray(self.bc.free_mask, dtype=bool)
         self.n = self.space.num_dofs
+        # one stable function object → one jit signature for the AC reaction
+        self._react_fn = lambda u: -self.eps2 * u * (u**2 - 1.0)
 
     # -- discrete residuals (the TensorPILS loss terms) ------------------------
     def wave_residual(self, u0, u1, u2):
@@ -92,9 +95,7 @@ class TimeDependentProblem:
 
     def ac_residual(self, u0, u1):
         """R = M(u1 − u0)/Δt + a²K u1 − F_react(u1)."""
-        react = self.asm.assemble_reaction_load(
-            u1, lambda u: -self.eps2 * u * (u**2 - 1.0)
-        )
+        react = self.asm.assemble_rhs(wf.reaction(u1, self._react_fn))
         r = self.mass.matvec((u1 - u0) / self.dt) + self.a2 * self.stiff.matvec(u1) - react
         return r * self.bc.free_mask
 
@@ -109,7 +110,7 @@ class TimeDependentProblem:
         """Backward Euler + Newton–Krylov for the Allen–Cahn semilinear term."""
         return NewtonKrylovIntegrator(
             self.asm, self.mass, self.stiff, dt=self.dt,
-            reaction=lambda u: -self.eps2 * u * (u**2 - 1.0),
+            reaction=self._react_fn,
             reaction_prime=lambda u: -self.eps2 * (3 * u**2 - 1.0),
             diffusion_scale=self.a2, bc=self.bc, newton_iters=newton_iters, **kw,
         )

@@ -25,8 +25,9 @@ over a batch of initial conditions; to batch over coefficient fields,
 construct the integrator *inside* the vmapped function::
 
     def traj(kappa, u0):
-        stiff = asm.assemble_stiffness(kappa)       # traced coefficient
-        integ = ThetaIntegrator(mass, stiff, dt=dt, theta=0.5, bc=bc)
+        # fused θ operators, one jit signature across the batch trace
+        integ = ThetaIntegrator.from_form(asm, weakform.diffusion(kappa),
+                                          dt=dt, theta=0.5, bc=bc)
         return integ.rollout(u0, n_steps)
 
     trajs = jax.vmap(traj)(kappa_batch, u0_batch)   # (B, T, N)

@@ -29,6 +29,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from ..core import weakform as wf
 from ..core.assembly import GalerkinAssembler
 from ..core.boundary import DirichletCondenser
 from ..core.solvers import sparse_solve
@@ -70,7 +71,7 @@ class NewtonKrylovIntegrator:
 
     def residual(self, u_prev, u):
         """G(u) at the implicit stage, projected to free DoFs."""
-        react = self.asm.assemble_reaction_load(u, self.reaction)
+        react = self.asm.assemble_rhs(wf.reaction(u, self.reaction))
         r = (
             self.mass.matvec((u - u_prev) / self.dt)
             + self.diffusion_scale * self.stiff.matvec(u)
@@ -80,7 +81,7 @@ class NewtonKrylovIntegrator:
 
     def _jacobian(self, u) -> CSR:
         # M[−r′(u)] shares the mass pattern: nodal-coefficient mass assembly
-        jac_vals = self.asm.assemble_mass(-self.reaction_prime(u)).vals
+        jac_vals = self.asm.assemble(wf.mass(-self.reaction_prime(u))).vals
         jac = dataclasses.replace(self.lin_op, vals=self.lin_op.vals + jac_vals)
         return jac if self.bc is None else self.bc.apply_matrix_only(jac)
 

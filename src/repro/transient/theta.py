@@ -43,8 +43,10 @@ class ThetaIntegrator:
     """One-step θ-method over pre-assembled CSR mass/stiffness operators.
 
     Construct *inside* a traced function to differentiate through the
-    operator values (e.g. ``stiff = asm.assemble_stiffness(kappa)`` with a
-    traced ``kappa``); the static sparsity pattern is reused across traces.
+    operator values — preferably via :meth:`from_form`, which builds both
+    effective operators with fused weak-form assemblies
+    (``assemble(mass(c) + θΔt·form)``) sharing one jit signature; the
+    static sparsity pattern is reused across traces.
 
     ``backend="csr"`` (default) keeps the rollout differentiable via
     ``sparse_solve``; ``"ell"`` / ``"ell_pallas"`` run the inner matvecs on
@@ -52,8 +54,8 @@ class ThetaIntegrator:
     (``lax.while_loop`` is forward-only).
     """
 
-    mass: CSR
-    stiff: CSR
+    mass: CSR | None
+    stiff: CSR | None
     dt: float
     theta: float = BACKWARD_EULER
     bc: DirichletCondenser | None = None
@@ -61,11 +63,18 @@ class ThetaIntegrator:
     tol: float = 1e-10
     maxiter: int = 10000
     backend: str = "csr"
+    # effective operators; pass directly (see from_form) or leave None to
+    # have them formed from mass/stiff (same pattern as M / K)
+    lhs_full: CSR | None = None
+    rhs_op: CSR | None = None
 
     def __post_init__(self):
-        # effective operators, formed once (same pattern as M / K)
-        self.lhs_full = axpy_csr(1.0, self.mass, self.theta * self.dt, self.stiff)
-        self.rhs_op = axpy_csr(1.0, self.mass, -(1.0 - self.theta) * self.dt, self.stiff)
+        if self.lhs_full is None:
+            self.lhs_full = axpy_csr(1.0, self.mass, self.theta * self.dt, self.stiff)
+        if self.rhs_op is None:
+            self.rhs_op = axpy_csr(
+                1.0, self.mass, -(1.0 - self.theta) * self.dt, self.stiff
+            )
         self.lhs = (
             self.bc.apply_matrix_only(self.lhs_full) if self.bc is not None
             else self.lhs_full
@@ -74,6 +83,32 @@ class ThetaIntegrator:
             self._lhs_mv = make_matvec(self.lhs, self.backend)
             self._rhs_mv = make_matvec(self.rhs_op, self.backend)
             self._precond = jacobi_preconditioner(self.lhs)
+
+    @classmethod
+    def from_form(cls, asm, form, dt, *, theta: float = BACKWARD_EULER,
+                  mass_coeff=None, bc=None, **kw) -> "ThetaIntegrator":
+        """Build the θ-step operators with two *fused* assemblies over the
+        weak-form API: ``lhs = assemble(mass(c) + θΔt·form)`` and
+        ``rhs_op = assemble(mass(c) − (1−θ)Δt·form)``.
+
+        ``form`` is the spatial bilinear form (e.g.
+        ``weakform.diffusion(kappa)`` — or a multi-term
+        ``diffusion(kappa) + advection(beta)``).  Both operators share one
+        static signature, so a single XLA executable serves both calls and
+        all subsequent ``dt``/coefficient updates.  Forms containing an
+        advection term make the lhs nonsymmetric, so the solver defaults to
+        BiCGStab for them (CG otherwise — pass ``solver=`` to override).
+        """
+        from ..core import weakform as wf
+
+        terms = wf._as_form(form).terms
+        kw.setdefault(
+            "solver", "bicgstab" if any(t.kind == "advection" for t in terms) else "cg"
+        )
+        lhs = asm.assemble(wf.mass(mass_coeff) + (theta * dt) * form)
+        rhs = asm.assemble(wf.mass(mass_coeff) + (-(1.0 - theta) * dt) * form)
+        return cls(None, None, dt, theta=theta, bc=bc,
+                   lhs_full=lhs, rhs_op=rhs, **kw)
 
     # -- one step --------------------------------------------------------------
     def step(self, u, load=None, bc_values=None):

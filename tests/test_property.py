@@ -106,6 +106,45 @@ def test_csr_matvec_equals_dense(n, seed):
     np.testing.assert_allclose(np.asarray(ell.matvec(x)), dense @ np.asarray(x), atol=1e-11)
 
 
+_WF_CACHE = {}
+
+
+def _wf_assembler(n):
+    """One assembler per mesh size — keeps the jit/form caches warm across
+    hypothesis examples (the property is about values, not compilation)."""
+    if n not in _WF_CACHE:
+        from repro.core import FunctionSpace, GalerkinAssembler, unit_square_tri
+        from repro.core.mesh import element_for_mesh
+
+        m = unit_square_tri(n)
+        space = FunctionSpace(m, element_for_mesh(m))
+        _WF_CACHE[n] = (m, GalerkinAssembler(space))
+    return _WF_CACHE[n]
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(3, 6),
+    scale=st.floats(0.1, 10.0),
+    seed=st.integers(0, 2**16),
+)
+def test_weakform_assembly_additive_and_homogeneous(n, scale, seed):
+    """assemble(a + s·b).vals == assemble(a).vals + s·assemble(b).vals on the
+    shared CSR pattern (linearity of the fused Map + single Reduce)."""
+    from repro.core import weakform as wf
+
+    m, asm = _wf_assembler(n)
+    rng = np.random.default_rng(seed)
+    c1 = jnp.asarray(rng.uniform(0.5, 2.0, m.num_cells))
+    c2 = jnp.asarray(rng.uniform(0.5, 2.0, m.num_cells))
+    fused = asm.assemble(wf.diffusion(c1) + scale * wf.mass(c2)).vals
+    separate = (
+        np.asarray(asm.assemble(wf.diffusion(c1)).vals)
+        + scale * np.asarray(asm.assemble(wf.mass(c2)).vals)
+    )
+    np.testing.assert_allclose(np.asarray(fused), separate, atol=1e-10, rtol=1e-12)
+
+
 @settings(max_examples=10, deadline=None)
 @given(
     tokens=st.integers(8, 64),

@@ -1,0 +1,272 @@
+"""Tests for the composable weak-form API (WeakForm terms, fused assembly)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    DirichletCondenser,
+    FacetAssembler,
+    FunctionSpace,
+    GalerkinAssembler,
+    bicgstab,
+    disk_tri,
+    jacobi_preconditioner,
+    unit_square_tri,
+    weakform as wf,
+)
+from repro.core import forms
+from repro.core.mesh import element_for_mesh
+from repro.transient.stepping import axpy_csr
+
+
+def _setup(n=6, mesh_fn=unit_square_tri):
+    m = mesh_fn(n)
+    space = FunctionSpace(m, element_for_mesh(m))
+    return m, space, GalerkinAssembler(space)
+
+
+# ---------------------------------------------------------------------------
+# form algebra + composition
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_assemble_is_additive_on_shared_pattern(seed):
+    """assemble(a + b).vals == assemble(a).vals + assemble(b).vals."""
+    m, space, asm = _setup()
+    rng = np.random.default_rng(seed)
+    c1 = jnp.asarray(rng.uniform(0.5, 2.0, m.num_cells))
+    c2 = jnp.asarray(rng.uniform(0.5, 2.0, m.num_cells))
+    fused = asm.assemble(wf.diffusion(c1) + wf.mass(c2)).vals
+    separate = asm.assemble(wf.diffusion(c1)).vals + asm.assemble(wf.mass(c2)).vals
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(separate), atol=1e-12)
+
+
+def test_scalar_scaling_distributes():
+    m, space, asm = _setup()
+    a = wf.diffusion(2.0) + wf.mass(0.5)
+    v1 = asm.assemble(3.0 * a).vals
+    v2 = 3.0 * asm.assemble(a).vals
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), atol=1e-12)
+    v3 = asm.assemble(a - wf.mass(0.5)).vals
+    v4 = asm.assemble(wf.diffusion(2.0)).vals
+    np.testing.assert_allclose(np.asarray(v3), np.asarray(v4), atol=1e-12)
+
+
+def test_sum_builtin_builds_forms():
+    m, space, asm = _setup()
+    terms = [wf.diffusion(), wf.mass(), 0.5 * wf.mass()]
+    v1 = asm.assemble(sum(terms)).vals
+    v2 = asm.assemble(terms[0]).vals + 1.5 * asm.assemble(wf.mass()).vals
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), atol=1e-12)
+
+
+def test_arity_mismatch_raises():
+    m, space, asm = _setup(4)
+    with pytest.raises(TypeError):
+        asm.assemble(wf.source(1.0))
+    with pytest.raises(TypeError):
+        asm.assemble_rhs(wf.diffusion())
+    with pytest.raises(ValueError):
+        asm.assemble(wf.WeakForm())
+    with pytest.raises(TypeError):
+        wf.mass() * wf.diffusion()  # forms scale by scalars, combine with +
+
+
+# ---------------------------------------------------------------------------
+# fused θ-operator: the acceptance-criterion identity
+# ---------------------------------------------------------------------------
+
+def test_fused_theta_operator_matches_shim_path():
+    """assemble(mass(c) + dt*diffusion(rho)) == M + dt·K to 1e-12."""
+    m, space, asm = _setup(8)
+    rng = np.random.default_rng(3)
+    c = jnp.asarray(rng.uniform(0.5, 2.0, m.num_cells))
+    rho = jnp.asarray(rng.uniform(0.5, 2.0, m.num_cells))
+    dt = 7.3e-3
+    fused = asm.assemble(wf.mass(c) + dt * wf.diffusion(rho))
+    shim = axpy_csr(1.0, asm.assemble_mass(c), dt, asm.assemble_stiffness(rho))
+    np.testing.assert_allclose(
+        np.asarray(fused.vals), np.asarray(shim.vals), atol=1e-12
+    )
+
+
+def test_fused_assembly_compiles_once_across_coefficient_values():
+    """Repeated assembly with new coefficient/dt values must not retrace."""
+    m, space, asm = _setup(5)
+    rho = jnp.ones(m.num_cells)
+    asm.assemble(wf.mass(1.0) + 0.01 * wf.diffusion(rho))  # trace once
+    n0 = asm.n_traces
+    for dt in (0.02, 0.05, 0.1):
+        asm.assemble(wf.mass(2.0 * dt) + dt * wf.diffusion(rho * dt))
+    assert asm.n_traces == n0, "fused assembly retraced on new coefficient values"
+
+
+# ---------------------------------------------------------------------------
+# symmetry structure of the new kernels
+# ---------------------------------------------------------------------------
+
+def test_diffusion_plus_mass_symmetric_advection_not():
+    m, space, asm = _setup()
+    k_sym = np.asarray(asm.assemble(wf.diffusion() + wf.mass()).to_dense())
+    np.testing.assert_allclose(k_sym, k_sym.T, atol=1e-13)
+    k_adv = np.asarray(asm.assemble(wf.advection(jnp.array([1.0, 0.5]))).to_dense())
+    assert np.abs(k_adv - k_adv.T).max() > 1e-6, "advection form should be nonsymmetric"
+    # but the advection skew part integrates β·∇(uv): constants are in its kernel
+    ones = np.ones(space.num_dofs)
+    np.testing.assert_allclose(k_adv @ ones, 0.0, atol=1e-12)
+
+
+def test_anisotropic_diffusion_identity_reduces_to_diffusion():
+    m, space, asm = _setup()
+    v1 = asm.assemble(wf.anisotropic_diffusion(jnp.eye(2))).vals
+    v2 = asm.assemble(wf.diffusion()).vals
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), atol=1e-13)
+    # scalar multiple of I == scaled isotropic diffusion
+    v3 = asm.assemble(wf.anisotropic_diffusion(2.5 * jnp.eye(2))).vals
+    np.testing.assert_allclose(np.asarray(v3), 2.5 * np.asarray(v2), atol=1e-12)
+
+
+def test_anisotropic_diffusion_symmetric_tensor_gives_symmetric_matrix():
+    m, space, asm = _setup()
+    a = jnp.array([[2.0, 0.3], [0.3, 1.0]])
+    k = np.asarray(asm.assemble(wf.anisotropic_diffusion(a)).to_dense())
+    np.testing.assert_allclose(k, k.T, atol=1e-12)
+    w = np.linalg.eigvalsh(k)
+    assert w.min() > -1e-10  # A ≻ 0 → K PSD
+
+
+# ---------------------------------------------------------------------------
+# advection–diffusion MMS convergence (P1 L2 rate ≈ 2)
+# ---------------------------------------------------------------------------
+
+def _advdiff_error(n):
+    """−Δu + β·∇u = f with u = sin(πx)sin(πy), β = (1, 1)."""
+    from repro.fem import AdvectionDiffusionProblem
+
+    pi = np.pi
+
+    def f(x):
+        sx, sy = jnp.sin(pi * x[..., 0]), jnp.sin(pi * x[..., 1])
+        cx, cy = jnp.cos(pi * x[..., 0]), jnp.cos(pi * x[..., 1])
+        return 2 * pi**2 * sx * sy + pi * cx * sy + pi * sx * cy
+
+    prob = AdvectionDiffusionProblem(unit_square_tri(n))
+    res = prob.solve(eps=1.0, beta=(1.0, 1.0), f=f, tol=1e-12)
+    pts = prob.space.dof_points
+    exact = np.sin(pi * pts[:, 0]) * np.sin(pi * pts[:, 1])
+    e = jnp.asarray(np.asarray(res.u) - exact)
+    mass = prob.asm.assemble(wf.mass())
+    return float(jnp.sqrt(e @ mass.matvec(e)))
+
+
+def test_advection_diffusion_mms_p1_rate():
+    e1, e2 = _advdiff_error(8), _advdiff_error(16)
+    rate = np.log2(e1 / e2)
+    assert 1.8 < rate < 2.3, (e1, e2, rate)
+
+
+# ---------------------------------------------------------------------------
+# mixed volume + boundary forms → single CSR
+# ---------------------------------------------------------------------------
+
+def test_mixed_volume_robin_single_csr_matches_legacy_path():
+    m = disk_tri(8, center=(0.0, 0.0), radius=1.0)
+    space = FunctionSpace(m, element_for_mesh(m))
+    asm = GalerkinAssembler(space)
+    fa = FacetAssembler(space, m.boundary_facets(), volume_routing=asm.mat_routing)
+    alpha = 1.3
+    fused = asm.assemble(wf.diffusion() + wf.robin(alpha, on=fa))
+    legacy = fa.add_robin(asm.assemble_stiffness(), alpha)
+    np.testing.assert_allclose(
+        np.asarray(fused.vals), np.asarray(legacy.vals), atol=1e-13
+    )
+    # u = x is harmonic with du/dn = x on the unit circle, so the Robin data
+    # du/dn + αu = (1 + α)x reproduces u = x
+    g = lambda x: (1.0 + alpha) * x[..., 0]
+    rhs = asm.assemble_rhs(wf.source(0.0) + wf.neumann(g, on=fa))
+    np.testing.assert_allclose(
+        np.asarray(rhs), np.asarray(fa.neumann_load(g)), atol=1e-13
+    )
+    # the fused system solves the analytic Robin problem (u = x)
+    u, info = bicgstab(fused.matvec, rhs, m=jacobi_preconditioner(fused),
+                       tol=1e-12)
+    exact = space.dof_points[:, 0]
+    err = np.linalg.norm(np.asarray(u) - exact) / np.linalg.norm(exact)
+    assert err < 1e-2, err
+
+
+# ---------------------------------------------------------------------------
+# differentiability + pytree context
+# ---------------------------------------------------------------------------
+
+def test_fused_assembly_differentiable_wrt_coefficients():
+    m, space, asm = _setup(5)
+    bc = DirichletCondenser(asm, space.boundary_dofs())
+    f = asm.assemble_rhs(wf.source(1.0))
+
+    def loss(kappa):
+        k = bc.apply_matrix_only(asm.assemble(wf.mass(0.1) + wf.diffusion(kappa)))
+        from repro.core import sparse_solve
+
+        u = sparse_solve(k, bc.project_residual(f), "cg", 1e-12, 1e-12)
+        return jnp.sum(u**2)
+
+    kappa = jnp.ones(m.num_cells)
+    g = jax.grad(loss)(kappa)
+    assert np.all(np.isfinite(np.asarray(g)))
+    i = int(np.argmax(np.abs(np.asarray(g))))
+    eps = 1e-6
+    fd = (loss(kappa.at[i].add(eps)) - loss(kappa.at[i].add(-eps))) / (2 * eps)
+    np.testing.assert_allclose(float(g[i]), float(fd), rtol=1e-4)
+
+
+def test_form_context_is_pytree_and_crosses_jit_vmap():
+    m, space, asm = _setup(4)
+    ctx = asm.context()
+    leaves, treedef = jax.tree_util.tree_flatten(ctx)
+    ctx2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert isinstance(ctx2, forms.FormContext)
+    np.testing.assert_array_equal(np.asarray(ctx2.detj), np.asarray(ctx.detj))
+
+    # jit over a context argument
+    k1 = jax.jit(lambda c: forms.diffusion(c, None))(ctx)
+    np.testing.assert_allclose(
+        np.asarray(k1), np.asarray(forms.diffusion(ctx, None)), atol=1e-14
+    )
+
+    # vmap over a batch of contexts (batched coords → batched geometry)
+    coords = jnp.stack([asm.coords, 2.0 * asm.coords])
+    batched_ctx = jax.vmap(asm.context)(coords)
+    k_b = jax.vmap(lambda c: forms.mass(c, None))(batched_ctx)
+    assert k_b.shape[0] == 2
+    np.testing.assert_allclose(
+        np.asarray(k_b[0]), np.asarray(forms.mass(asm.context(), None)), atol=1e-13
+    )
+
+
+def test_form_context_is_frozen():
+    import dataclasses
+
+    m, space, asm = _setup(4)
+    ctx = asm.context()
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        ctx.detj = ctx.detj * 2.0
+
+
+# ---------------------------------------------------------------------------
+# shims stay exact
+# ---------------------------------------------------------------------------
+
+def test_deprecated_shims_match_form_api():
+    m, space, asm = _setup(5)
+    rho = jnp.asarray(np.random.default_rng(7).uniform(0.5, 2.0, m.num_cells))
+    np.testing.assert_array_equal(
+        np.asarray(asm.assemble_stiffness(rho).vals),
+        np.asarray(asm.assemble(wf.diffusion(rho)).vals),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(asm.assemble_load(2.0)),
+        np.asarray(asm.assemble_rhs(wf.source(2.0))),
+    )

@@ -12,6 +12,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  Module → paper artifact map:
   bench_kernels            — Pallas kernel microbench (interpret mode)
   bench_transient          — repro.transient rollouts (heat/wave, CSR vs ELL)
   bench_weakform           — fused multi-term WeakForm assemble vs separate+add
+  bench_batched_assembly   — vmap-batched multi-instance assembly vs B singles
   bench_dryrun_roofline    — harness roofline table (from dry-run JSON)
 """
 
@@ -23,6 +24,7 @@ def main() -> None:
     from . import (
         bench_assembly_scaling,
         bench_batch_generation,
+        bench_batched_assembly,
         bench_dryrun_roofline,
         bench_kernels,
         bench_loss_eval,
@@ -47,6 +49,7 @@ def main() -> None:
         bench_kernels,
         bench_transient,
         bench_weakform,
+        bench_batched_assembly,
         bench_dryrun_roofline,
     ]
     print("name,us_per_call,derived")

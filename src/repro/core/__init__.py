@@ -9,7 +9,20 @@ import jax
 
 jax.config.update("jax_enable_x64", True)
 
-from .assembly import GalerkinAssembler, geometry_context, facet_context  # noqa: E402,F401
+from .assembly import (  # noqa: E402,F401
+    AssemblyPlan,
+    GalerkinAssembler,
+    assemble,
+    assemble_batched,
+    assemble_rhs,
+    assemble_rhs_batched,
+    assemble_rhs_sharded,
+    assemble_sharded,
+    build_plan,
+    clear_assembly_caches,
+    facet_context,
+    geometry_context,
+)
 from .boundary import DirichletCondenser, FacetAssembler  # noqa: E402,F401
 from .elements import ReferenceElement, get_element  # noqa: E402,F401
 from .mesh import (  # noqa: E402,F401
@@ -24,7 +37,13 @@ from .mesh import (  # noqa: E402,F401
     unit_cube_tet,
     unit_square_tri,
 )
-from .solvers import bicgstab, cg, jacobi_preconditioner, sparse_solve  # noqa: E402,F401
-from .sparse import CSR, ELL, csr_to_ell  # noqa: E402,F401
+from .solvers import (  # noqa: E402,F401
+    bicgstab,
+    cg,
+    jacobi_preconditioner,
+    sparse_solve,
+    sparse_solve_batched,
+)
+from .sparse import CSR, ELL, BatchedCSR, csr_to_ell  # noqa: E402,F401
 from . import weakform  # noqa: E402,F401
 from .weakform import WeakForm  # noqa: E402,F401

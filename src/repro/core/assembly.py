@@ -1,23 +1,43 @@
 """TensorGalerkin: Batch-Map + Sparse-Reduce assembly (the paper's core).
 
+The assembly subsystem is a **functional core** behind a thin class facade:
+
 * :func:`geometry_context` — Stage-I geometry: batched Jacobians, closed-form
   inverses/determinants, push-forward gradients (Alg. 1, lines 1–3).
-* :class:`GalerkinAssembler` — owns one mesh topology: quadrature tables,
-  routing (Stage-II precompute), and the jit-cached
-  :meth:`~GalerkinAssembler.assemble` / :meth:`~GalerkinAssembler.assemble_rhs`
-  entry points over :mod:`~repro.core.weakform` forms.  A multi-term form
-  traces **one fused Map** (all volume kernels against a shared geometry
-  context, built inside the jit boundary) and **one Reduce**; facet terms
-  inject into the volume CSR pattern.  Jaxprs contain no element-indexed
-  Python constructs — the JAX analogue of the O(1)-graph property.
+* :class:`AssemblyPlan` — a frozen, pytree-registered value holding one
+  (mesh topology × element × quadrature) signature: the static quadrature /
+  element tables and Stage-II routing live in identity-hashed aux data
+  (:class:`PlanStatic`), the traced ``coords`` array is the single pytree
+  leaf.  Plans cross ``jit`` / ``vmap`` / ``grad`` boundaries like any other
+  value; build one with :func:`build_plan`.
+* Pure top-level entry points that close over **nothing**:
+  :func:`assemble` / :func:`assemble_rhs` (single instance, jit-cached per
+  form signature), :func:`assemble_batched` / :func:`assemble_rhs_batched`
+  (one fused Map over ``(B, E, ...)`` and one Reduce per instance via
+  ``vmap`` — B coefficient-sets / geometries in a single XLA executable,
+  zero retraces across the batch), and :func:`assemble_sharded` /
+  :func:`assemble_rhs_sharded` (opt-in ``shard_map`` partitioning of the
+  element axis of the Map stage across devices, Reduce completed by one
+  all-reduce over partial nnz contributions).
+* :class:`GalerkinAssembler` — the cache-owning facade over a plan: every
+  historical call site keeps working; new code may use the plan functions
+  directly.  A multi-term form traces **one fused Map** (all volume kernels
+  against a shared geometry context, built inside the jit boundary) and
+  **one Reduce**; facet terms inject into the volume CSR pattern.  Jaxprs
+  contain no element-indexed Python constructs — the JAX analogue of the
+  O(1)-graph property.
 * Deprecated shims ``assemble_stiffness`` / ``assemble_mass`` /
   ``assemble_elasticity`` / ``assemble_load`` / ``assemble_reaction_load``
-  forward to the form API one term at a time.
+  forward to the form API one term at a time (with a ``DeprecationWarning``).
 * Baselines for the paper's comparison: a Python per-element scatter-add loop
   (the "white box" of Fig. 1) and a dense ``.at[].add()`` scatter.
 """
 
 from __future__ import annotations
+
+import dataclasses
+import warnings
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -25,11 +45,26 @@ import numpy as np
 
 from . import forms, weakform
 from .elements import get_element
-from .mesh import FunctionSpace, Mesh
+from .mesh import FunctionSpace
 from .routing import MatrixRouting, VectorRouting, build_matrix_routing, build_vector_routing
-from .sparse import CSR
+from .sparse import CSR, BatchedCSR
 
-__all__ = ["GalerkinAssembler", "geometry_context", "facet_context"]
+__all__ = [
+    "AssemblyPlan",
+    "PlanStatic",
+    "build_plan",
+    "assemble",
+    "assemble_rhs",
+    "assemble_batched",
+    "assemble_rhs_batched",
+    "assemble_sharded",
+    "assemble_rhs_sharded",
+    "GalerkinAssembler",
+    "geometry_context",
+    "facet_context",
+    "clear_assembly_caches",
+    "n_core_traces",
+]
 
 
 # ---------------------------------------------------------------------------
@@ -143,14 +178,14 @@ def reduce_matrix(k_local: jnp.ndarray, routing: MatrixRouting, mode: str = "sor
     v = k_local.reshape(-1)
     if mode == "sorted":
         vals = jax.ops.segment_sum(
-            v[jnp.asarray(routing.perm)],
-            jnp.asarray(routing.seg_ids),
+            v[routing.perm_dev],
+            routing.seg_ids_dev,
             num_segments=routing.nnz,
             indices_are_sorted=True,
         )
     else:  # direct scatter-add (one XLA scatter; benchmark comparison)
         vals = jax.ops.segment_sum(
-            v, jnp.asarray(routing.seg_ids_unsorted), num_segments=routing.nnz
+            v, routing.seg_ids_unsorted_dev, num_segments=routing.nnz
         )
     return vals
 
@@ -160,92 +195,94 @@ def reduce_vector(f_local: jnp.ndarray, routing: VectorRouting, mode: str = "sor
     v = f_local.reshape(-1)
     if mode == "sorted":
         packed = jax.ops.segment_sum(
-            v[jnp.asarray(routing.perm)],
-            jnp.asarray(routing.seg_ids),
+            v[routing.perm_dev],
+            routing.seg_ids_dev,
             num_segments=routing.touched.shape[0],
             indices_are_sorted=True,
         )
     else:
         packed = jax.ops.segment_sum(
-            v, jnp.asarray(routing.seg_ids_unsorted),
+            v, routing.seg_ids_unsorted_dev,
             num_segments=routing.touched.shape[0],
         )
     out = jnp.zeros((routing.num_dofs,), dtype=v.dtype)
-    return out.at[jnp.asarray(routing.touched)].set(packed)
+    return out.at[routing.touched_dev].set(packed)
 
 
 # ---------------------------------------------------------------------------
-# The assembler
+# The assembly plan: static tables as identity-hashed aux, coords as the leaf
 # ---------------------------------------------------------------------------
 
-class GalerkinAssembler:
-    """One instance per (mesh topology × element × quadrature) signature.
+@dataclasses.dataclass(frozen=True, eq=False)
+class PlanStatic:
+    """Compile-time constants of one assembly signature.
 
-    All numpy tables built here are compile-time constants of the jitted
-    assembly closures — re-instantiating for a same-signature mesh reuses
-    XLA executables via jit's cache (shape-bucketed compilation, DESIGN §2).
+    ``eq=False`` keeps identity hashing, so a ``PlanStatic`` is a valid jit
+    static argument and pytree aux datum: two plans compare equal exactly
+    when they share tables, which is what executable reuse needs.
     """
 
-    def __init__(self, space: FunctionSpace, quad_order: int | None = None,
-                 reduce_mode: str = "direct"):
-        # reduce_mode: 'direct' lowers to one XLA scatter-add (2.5× faster on
-        # CPU, still deterministic — no atomics in XLA); 'sorted' is the
-        # gather + sorted-segment-sum path (TPU-preferred layout).  Both are
-        # bit-reproducible; see EXPERIMENTS.md §Perf-FEM.
-        self.space = space
-        self.mesh = space.mesh
-        self.element = space.element
-        self.reduce_mode = reduce_mode
+    w: jnp.ndarray                       # (Q,) quadrature weights
+    phi: jnp.ndarray                     # (Q, k) field basis values
+    gradhat: jnp.ndarray                 # (Q, k, d) reference gradients
+    geo_phi: jnp.ndarray                 # (Q, nv_geo) geometry basis
+    geo_grad: jnp.ndarray                # (Q, nv_geo, d) geometry gradients
+    scalar_cell_dofs: jnp.ndarray | None  # (E, k_scalar) for nodal coeffs
+    mat_routing: MatrixRouting
+    vec_routing: VectorRouting
+    num_dofs: int
+    value_size: int
+    reduce_mode: str = "direct"
 
-        pts, w = self.element.default_rule(quad_order)
-        self.w = jnp.asarray(w)
-        self.phi = jnp.asarray(self.element.tabulate(pts))
-        self.gradhat = jnp.asarray(self.element.tabulate_grad(pts))
 
-        # geometry element: vertices of the cell (affine/bilinear map)
-        geo_name = {"tri": "P1_tri", "tet": "P1_tet", "quad": "Q1_quad"}[
-            self.mesh.cell_type
-        ]
-        geo = get_element(geo_name)
-        self.geo_phi = jnp.asarray(geo.tabulate(pts))
-        self.geo_grad = jnp.asarray(geo.tabulate_grad(pts))
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True, eq=False)
+class AssemblyPlan:
+    """One (mesh topology × element × quadrature) assembly signature as a
+    value: ``coords`` is the single traced pytree leaf (differentiable —
+    shape optimization, batched geometries), everything else is aux data.
 
-        self.coords = jnp.asarray(self.mesh.points[self.mesh.cells])  # (E, nv, d)
-        # scalar cell dofs (coefficient interpolation uses the scalar space)
-        if space.value_size == 1:
-            self._scalar_cell_dofs = jnp.asarray(space.cell_dofs)
-        else:
-            self._scalar_cell_dofs = jnp.asarray(
-                space.cell_dofs[:, :: space.value_size] // space.value_size
-            )
+    ``eq=False``: plans compare/hash by identity — the generated field-wise
+    ``__eq__``/``__hash__`` would choke on the traced coords array."""
 
-        self.mat_routing = build_matrix_routing(
-            space.cell_dofs, None, space.num_dofs
-        )
-        self.vec_routing = build_vector_routing(space.cell_dofs, space.num_dofs)
+    coords: jnp.ndarray                  # (E, nv_geo, d) — the ONLY leaf
+    static: PlanStatic
 
-        # jit cache for the form API: one compiled executable per static form
-        # signature (term kinds × domains × coefficient structure); all
-        # coefficient values are traced leaves.  n_traces counts retraces —
-        # repeated assembly with new coefficient *values* must not grow it.
-        # Callable coefficients are part of the signature (identity-keyed):
-        # per-call lambdas each compile fresh, so the cache is FIFO-bounded —
-        # evicting an entry drops its jit wrapper and with it the compiled
-        # executable — and hot loops should reuse stable function objects.
-        self._form_cache: dict = {}
-        self._form_cache_limit = 128
-        self.n_traces = 0
+    # -- pytree ----------------------------------------------------------
+    def tree_flatten(self):
+        return (self.coords,), self.static
 
-    # -- context -------------------------------------------------------------
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        (coords,) = children
+        return cls(coords, aux)
+
+    # -- derived ---------------------------------------------------------
+    @property
+    def num_dofs(self) -> int:
+        return self.static.num_dofs
+
+    @property
+    def nnz(self) -> int:
+        return self.static.mat_routing.nnz
+
+    @property
+    def num_cells(self) -> int:
+        return int(self.coords.shape[0])
+
+    def with_coords(self, coords: jnp.ndarray) -> "AssemblyPlan":
+        return AssemblyPlan(coords, self.static)
+
     def context(self, coords: jnp.ndarray | None = None) -> forms.FormContext:
-        coords = self.coords if coords is None else coords
+        st = self.static
         return geometry_context(
-            coords, self.geo_phi, self.geo_grad, self.phi, self.gradhat, self.w,
-            scalar_cell_dofs=self._scalar_cell_dofs,
+            self.coords if coords is None else coords,
+            st.geo_phi, st.geo_grad, st.phi, st.gradhat, st.w,
+            scalar_cell_dofs=st.scalar_cell_dofs,
         )
 
     def csr(self, vals: jnp.ndarray) -> CSR:
-        r = self.mat_routing
+        r = self.static.mat_routing
         return CSR(
             vals=vals,
             indptr=r.indptr,
@@ -254,6 +291,525 @@ class GalerkinAssembler:
             shape=(r.num_dofs, r.num_dofs),
             diag_pos=r.diag_pos,
         )
+
+    def batched_csr(self, vals: jnp.ndarray) -> BatchedCSR:
+        r = self.static.mat_routing
+        return BatchedCSR(
+            vals=vals,
+            indptr=r.indptr,
+            indices=r.indices,
+            row_of_nnz=r.row_of_nnz,
+            shape=(r.num_dofs, r.num_dofs),
+            diag_pos=r.diag_pos,
+        )
+
+
+def build_plan(space: FunctionSpace, quad_order: int | None = None,
+               reduce_mode: str = "direct") -> AssemblyPlan:
+    """Precompute one :class:`AssemblyPlan` for a function space.
+
+    ``reduce_mode``: 'direct' lowers to one XLA scatter-add (2.5× faster on
+    CPU, still deterministic — no atomics in XLA); 'sorted' is the gather +
+    sorted-segment-sum path (TPU-preferred layout).  Both are
+    bit-reproducible; see EXPERIMENTS.md §Perf-FEM.
+    """
+    mesh, element = space.mesh, space.element
+    pts, w = element.default_rule(quad_order)
+    geo_name = {"tri": "P1_tri", "tet": "P1_tet", "quad": "Q1_quad"}[mesh.cell_type]
+    geo = get_element(geo_name)
+
+    if space.value_size == 1:
+        scalar_cell_dofs = jnp.asarray(space.cell_dofs)
+    else:
+        scalar_cell_dofs = jnp.asarray(
+            space.cell_dofs[:, :: space.value_size] // space.value_size
+        )
+
+    static = PlanStatic(
+        w=jnp.asarray(w),
+        phi=jnp.asarray(element.tabulate(pts)),
+        gradhat=jnp.asarray(element.tabulate_grad(pts)),
+        geo_phi=jnp.asarray(geo.tabulate(pts)),
+        geo_grad=jnp.asarray(geo.tabulate_grad(pts)),
+        scalar_cell_dofs=scalar_cell_dofs,
+        mat_routing=build_matrix_routing(space.cell_dofs, None, space.num_dofs),
+        vec_routing=build_vector_routing(space.cell_dofs, space.num_dofs),
+        num_dofs=space.num_dofs,
+        value_size=space.value_size,
+        reduce_mode=reduce_mode,
+    )
+    return AssemblyPlan(jnp.asarray(mesh.points[mesh.cells]), static)
+
+
+# ---------------------------------------------------------------------------
+# The functional core: pure form evaluation (closes over nothing)
+# ---------------------------------------------------------------------------
+
+_N_CORE_TRACES = [0]
+
+
+def n_core_traces() -> int:
+    """Global trace counter of the functional core — bumped once per jaxpr
+    trace of :func:`_eval_form`.  Repeated (batched) assembly with new
+    coefficient *values* must not grow it (zero-retrace property)."""
+    return _N_CORE_TRACES[0]
+
+
+def _map_stage(static: PlanStatic, ctx: forms.FormContext, spec, leaves):
+    """One fused Map: evaluate every term of ``spec`` against the shared
+    volume context (facet terms against their domain's facet context) and
+    accumulate local matrices/vectors term-wise."""
+    vs = static.value_size
+    leaf = iter(leaves)
+    facet_ctxs: dict = {}
+    local_sum = None            # fused volume Map accumulator
+    facet_sums: dict = {}       # domain -> facet Map accumulator
+    for kind, domain, desc in spec:
+        vals = [next(leaf) if d == weakform.TRACED else d[1] for d in desc]
+        *coeffs, scale = vals
+        if domain is None:
+            tctx = ctx
+        else:
+            if domain not in facet_ctxs:
+                facet_ctxs[domain] = domain.context()
+            tctx = facet_ctxs[domain]
+        kern = weakform.KERNELS[kind].fn
+        local = kern(tctx, vs, *coeffs) * jnp.asarray(scale)
+        if domain is None:
+            if local_sum is not None and local_sum.shape != local.shape:
+                raise ValueError(
+                    f"term '{kind}' local shape {local.shape} does not "
+                    f"match earlier terms {local_sum.shape} — scalar "
+                    "and vector-valued kernels cannot be fused"
+                )
+            local_sum = local if local_sum is None else local_sum + local
+        else:
+            prev = facet_sums.get(domain)
+            facet_sums[domain] = local if prev is None else prev + local
+    return local_sum, facet_sums
+
+
+def _zero_fallback_dtype(coords, facet_sums):
+    """dtype of the all-facet (no volume term) zero fallback: derived from
+    the traced inputs, NOT the jax default — a float32 plan must not
+    silently upcast facet-only forms to float64."""
+    dts = [loc.dtype for loc in facet_sums.values()]
+    return jnp.result_type(*dts) if dts else coords.dtype
+
+
+def _eval_form(static: PlanStatic, coords, spec, leaves, arity: str):
+    """Pure fused Map + Reduce over one lowered form.  All closure-free:
+    ``static`` carries the tables, ``coords``/``leaves`` are the traced
+    inputs, ``spec`` is the static signature."""
+    _N_CORE_TRACES[0] += 1
+    ctx = geometry_context(
+        coords, static.geo_phi, static.geo_grad, static.phi, static.gradhat,
+        static.w, scalar_cell_dofs=static.scalar_cell_dofs,
+    )
+    local_sum, facet_sums = _map_stage(static, ctx, spec, leaves)
+    mode = static.reduce_mode
+
+    if arity == weakform.MATRIX:
+        out = (
+            reduce_matrix(local_sum, static.mat_routing, mode)
+            if local_sum is not None
+            else jnp.zeros(
+                (static.mat_routing.nnz,),
+                dtype=_zero_fallback_dtype(coords, facet_sums),
+            )
+        )
+        for domain, loc in facet_sums.items():
+            fvals = reduce_matrix(loc, domain.mat_routing, mode)
+            # numpy precompute on static data, cached per (domain, routing)
+            inj = jnp.asarray(domain.injection_into(static.mat_routing))
+            out = out.at[inj].add(fvals.astype(out.dtype))
+        return out
+
+    out = (
+        reduce_vector(local_sum, static.vec_routing, mode)
+        if local_sum is not None
+        else jnp.zeros(
+            (static.num_dofs,), dtype=_zero_fallback_dtype(coords, facet_sums)
+        )
+    )
+    for domain, loc in facet_sums.items():
+        out = out + reduce_vector(loc, domain.vec_routing, mode)
+    return out
+
+
+def _check_facet_coords(spec, coords):
+    if coords is not None and any(domain is not None for _, domain, _ in spec):
+        # facet geometry comes from the FacetAssembler's construction-time
+        # coords; silently mixing it with overridden volume coords would
+        # give inconsistent values and zero boundary coordinate gradients
+        raise NotImplementedError(
+            "assemble(form, coords=...) does not support facet terms: "
+            "boundary geometry is fixed at FacetAssembler construction"
+        )
+
+
+# -- single-instance entry points (jit-cached per (plan, signature)) ---------
+#
+# One jitted wrapper per static key, held in a module-level FIFO-bounded
+# dict shared by the facade and the pure entry points.  The bound matters
+# for identity-keyed callable coefficients: per-call lambdas mint a fresh
+# signature each call, and evicting the wrapper drops its compiled
+# executable — an unbounded jax.jit static-arg cache would retain them all
+# (hot loops should still reuse stable function objects).
+
+_FORM_FNS: dict = {}
+_FORM_FNS_LIMIT = 256
+
+
+def _cached_form_fn(key, build):
+    fn = _FORM_FNS.get(key)
+    if fn is None:
+        while len(_FORM_FNS) >= _FORM_FNS_LIMIT:
+            _FORM_FNS.pop(next(iter(_FORM_FNS)))
+        fn = jax.jit(build())
+        _FORM_FNS[key] = fn
+    return fn
+
+
+def _assemble_flat(coords, leaves, *, static, spec, arity):
+    fn = _cached_form_fn(
+        ("single", static, spec, arity),
+        lambda: lambda c, lv: _eval_form(static, c, spec, lv, arity),
+    )
+    return fn(coords, leaves)
+
+
+def assemble(plan: AssemblyPlan, form, coords=None) -> CSR:
+    """Assemble a bilinear :class:`~repro.core.weakform.WeakForm` into a CSR
+    on the plan's volume pattern — the pure-function twin of
+    :meth:`GalerkinAssembler.assemble`.
+
+    One fused Map over a shared geometry context (built from ``coords``
+    inside the jit boundary), one Reduce; facet terms (``robin(alpha,
+    on=facets)``) reduce through their facet routing and are injected into
+    the volume CSR pattern.  Coefficients and scale factors are traced, so
+    re-assembly with new *values* reuses the compiled executable.
+    """
+    spec, leaves = weakform.lower(form, weakform.MATRIX)
+    _check_facet_coords(spec, coords)
+    c = plan.coords if coords is None else coords
+    vals = _assemble_flat(c, leaves, static=plan.static, spec=spec,
+                          arity=weakform.MATRIX)
+    return plan.csr(vals)
+
+
+def assemble_rhs(plan: AssemblyPlan, form, coords=None) -> jnp.ndarray:
+    """Assemble a linear form into a global ``(num_dofs,)`` vector — same
+    fused pipeline as :func:`assemble`."""
+    spec, leaves = weakform.lower(form, weakform.VECTOR)
+    _check_facet_coords(spec, coords)
+    c = plan.coords if coords is None else coords
+    return _assemble_flat(c, leaves, static=plan.static, spec=spec,
+                          arity=weakform.VECTOR)
+
+
+# -- vmap-batched multi-instance assembly ------------------------------------
+
+def _assemble_batched_flat(coords, leaves, *, static, spec, arity, axes):
+    coords_ax, leaf_axes = axes
+
+    def build():
+        return lambda c, lv: jax.vmap(
+            lambda ci, lvi: _eval_form(static, ci, spec, lvi, arity),
+            in_axes=(coords_ax, leaf_axes),
+        )(c, lv)
+
+    fn = _cached_form_fn(("batched", static, spec, arity, axes), build)
+    return fn(coords, leaves)
+
+
+def _lower_batched(plan, form, arity, coords_batch, leaves_batch):
+    spec, leaves0 = weakform.lower(form, arity)
+    if any(domain is not None for _, domain, _ in spec):
+        raise NotImplementedError(
+            "batched assembly supports volume terms only: facet geometry is "
+            "fixed at FacetAssembler construction and cannot vary per instance"
+        )
+    if leaves_batch is None:
+        leaves_batch = (None,) * len(leaves0)
+    elif not isinstance(leaves_batch, (tuple, list)):
+        # single-array convenience: batch the first traced slot
+        leaves_batch = (leaves_batch,) + (None,) * (len(leaves0) - 1)
+    if len(leaves_batch) != len(leaves0):
+        raise ValueError(
+            f"leaves_batch has {len(leaves_batch)} slots but the form lowers "
+            f"to {len(leaves0)} traced leaves (per term: coefficients, then "
+            "the scale factor) — pass None for slots shared across the batch"
+        )
+    merged = tuple(
+        b if b is not None else l0 for b, l0 in zip(leaves_batch, leaves0)
+    )
+    leaf_axes = tuple(0 if b is not None else None for b in leaves_batch)
+    coords_ax = 0 if coords_batch is not None else None
+    sizes = {int(jnp.shape(b)[0]) for b in leaves_batch if b is not None}
+    if coords_batch is not None:
+        sizes.add(int(jnp.shape(coords_batch)[0]))
+    if not sizes:
+        raise ValueError(
+            "nothing is batched: pass coords_batch and/or batched leaves"
+        )
+    if len(sizes) > 1:
+        raise ValueError(f"inconsistent batch sizes {sorted(sizes)}")
+    coords = plan.coords if coords_batch is None else coords_batch
+    return spec, merged, coords, (coords_ax, leaf_axes)
+
+
+def assemble_batched(plan: AssemblyPlan, form, coords_batch=None,
+                     leaves_batch=None) -> BatchedCSR:
+    """Assemble B problem instances in ONE fused Map over ``(B, E, ...)`` and
+    one Reduce per instance via ``vmap`` — a single XLA executable for the
+    whole batch, zero retraces across batch *values*.
+
+    ``form`` is the template form (its own coefficient values fill any slot
+    not batched).  ``coords_batch: (B, E, nv, d)`` batches the geometry;
+    ``leaves_batch`` batches coefficients/scales — a tuple aligned with the
+    form's traced leaves in slot order (per term: coefficients, then the
+    scale factor), each entry either ``None`` (shared) or an array with a
+    leading batch axis.  A bare array batches the first traced slot::
+
+        kb = assemble_batched(plan, wf.diffusion(rho_b[0]),
+                              leaves_batch=(rho_b, None))   # (B, E) coeffs
+
+    Returns a :class:`~repro.core.sparse.BatchedCSR` — shared static pattern,
+    ``(B, nnz)`` values — composing with ``vmap``-ed
+    :func:`~repro.core.solvers.sparse_solve`
+    (:func:`~repro.core.solvers.sparse_solve_batched`).
+    """
+    spec, merged, coords, axes = _lower_batched(
+        plan, form, weakform.MATRIX, coords_batch, leaves_batch
+    )
+    vals = _assemble_batched_flat(coords, merged, static=plan.static,
+                                  spec=spec, arity=weakform.MATRIX, axes=axes)
+    return plan.batched_csr(vals)
+
+
+def assemble_rhs_batched(plan: AssemblyPlan, form, coords_batch=None,
+                         leaves_batch=None) -> jnp.ndarray:
+    """Batched linear-form assembly → ``(B, num_dofs)`` (see
+    :func:`assemble_batched` for the batching conventions)."""
+    spec, merged, coords, axes = _lower_batched(
+        plan, form, weakform.VECTOR, coords_batch, leaves_batch
+    )
+    return _assemble_batched_flat(coords, merged, static=plan.static,
+                                  spec=spec, arity=weakform.VECTOR, axes=axes)
+
+
+# -- shard_map element-parallel assembly -------------------------------------
+#
+# The named FEM mesh axis is registered in repro.sharding.partitioning
+# (FEM_MESH_AXIS / fem_mesh); it is resolved lazily here so importing the
+# core never drags in the LM sharding stack.
+
+def _fem_axis_name() -> str:
+    from ..sharding.partitioning import FEM_MESH_AXIS
+
+    return FEM_MESH_AXIS
+
+
+def _default_fem_mesh(axis_name: str):
+    from ..sharding.partitioning import fem_mesh
+
+    return fem_mesh(axis_name=axis_name)
+
+
+def _assemble_sharded_flat(coords, leaves, *, static, spec, arity, mesh, axis_name):
+    fn = _cached_form_fn(
+        ("sharded", static, spec, arity, mesh, axis_name),
+        lambda: partial(_sharded_impl, static=static, spec=spec, arity=arity,
+                        mesh=mesh, axis_name=axis_name),
+    )
+    return fn(coords, leaves)
+
+
+def _sharded_impl(coords, leaves, *, static, spec, arity, mesh, axis_name):
+    """Partition the element axis of the Map stage over ``mesh[axis_name]``;
+    each device reduces its element block to *partial* global contributions
+    (full nnz / touched-dof length) and one all-reduce completes the Reduce.
+
+    Elements are zero-cost padded to a multiple of the device count: padded
+    rows replicate the last element's geometry but carry out-of-range
+    segment ids, which ``segment_sum`` drops.
+
+    The per-shard reduce always uses the direct (unsorted scatter-add)
+    segment ids regardless of ``plan.static.reduce_mode``: the sorted
+    layout's global permutation interleaves elements across shards and does
+    not decompose into per-shard sorted runs.  Both modes are deterministic
+    and the psum of partials is bit-stable, so results still match the
+    single-device path.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    _N_CORE_TRACES[0] += 1
+    ndev = mesh.shape[axis_name]
+    e = coords.shape[0]
+    pad = (-e) % ndev
+    routing = static.mat_routing if arity == weakform.MATRIX else static.vec_routing
+    n_seg = routing.nnz if arity == weakform.MATRIX else routing.touched.shape[0]
+    slots = routing.seg_ids_unsorted.shape[0] // e
+
+    # static numpy precompute (host constants baked per trace)
+    seg = routing.seg_ids_unsorted.reshape(e, slots)
+    seg = np.concatenate([seg, np.full((pad, slots), n_seg, dtype=seg.dtype)])
+
+    def pad_rows(x):
+        return jnp.concatenate(
+            [x, jnp.broadcast_to(x[-1:], (pad,) + x.shape[1:])]
+        ) if pad else x
+
+    coords_p = pad_rows(coords)
+    scd = static.scalar_cell_dofs
+    scd_p = pad_rows(scd) if scd is not None else None
+
+    # shard leaves whose leading axis is the element axis; replicate the
+    # rest (scalars, nodal fields, constant vectors) — mirrors the shape
+    # resolution order of forms.eval_coefficient
+    leaf_flags = tuple(
+        jnp.ndim(lv) >= 1 and jnp.shape(lv)[0] == e for lv in leaves
+    )
+    leaves_p = tuple(
+        pad_rows(jnp.asarray(lv)) if flag else jnp.asarray(lv)
+        for lv, flag in zip(leaves, leaf_flags)
+    )
+    leaf_specs = tuple(P(axis_name) if flag else P() for flag in leaf_flags)
+    scd_args = (scd_p,) if scd_p is not None else ()
+    scd_specs = ((P(axis_name),) if scd_p is not None else ())
+
+    def body(coords_s, seg_s, *rest):
+        scd_s = rest[0] if scd_p is not None else None
+        leaf_s = rest[1:] if scd_p is not None else rest
+        ctx = geometry_context(
+            coords_s, static.geo_phi, static.geo_grad, static.phi,
+            static.gradhat, static.w, scalar_cell_dofs=scd_s,
+        )
+        local_sum, facet_sums = _map_stage(static, ctx, spec, leaf_s)
+        assert not facet_sums, "sharded assembly is volume-only (checked above)"
+        part = jax.ops.segment_sum(
+            local_sum.reshape(-1), seg_s.reshape(-1), num_segments=n_seg
+        )
+        return jax.lax.psum(part, axis_name)
+
+    sharded = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(axis_name), P(axis_name)) + scd_specs + leaf_specs,
+        out_specs=P(),
+        check_rep=False,
+    )
+    packed = sharded(coords_p, jnp.asarray(seg), *scd_args, *leaves_p)
+    if arity == weakform.MATRIX:
+        return packed
+    out = jnp.zeros((routing.num_dofs,), dtype=packed.dtype)
+    return out.at[routing.touched_dev].set(packed)
+
+
+def _assemble_sharded_vals(plan, form, arity, mesh, axis_name, coords):
+    spec, leaves = weakform.lower(form, arity)
+    if any(domain is not None for _, domain, _ in spec):
+        raise NotImplementedError(
+            "sharded assembly supports volume terms only — assemble facet "
+            "terms separately and inject (FacetAssembler.injection_into)"
+        )
+    if axis_name is None:
+        axis_name = _fem_axis_name()
+    if mesh is None:
+        mesh = _default_fem_mesh(axis_name)
+    c = plan.coords if coords is None else coords
+    return _assemble_sharded_flat(c, leaves, static=plan.static, spec=spec,
+                                  arity=arity, mesh=mesh, axis_name=axis_name)
+
+
+def assemble_sharded(plan: AssemblyPlan, form, mesh=None,
+                     axis_name: str | None = None, coords=None) -> CSR:
+    """Opt-in multi-device assembly: the element axis of the Map stage is
+    ``shard_map``-partitioned over ``mesh[axis_name]`` (default: the FEM
+    mesh from :func:`repro.sharding.partitioning.fem_mesh` over all local
+    devices); the segment-sum Reduce is completed by a single all-reduce
+    over partial nnz contributions.  Matches single-device assembly to
+    machine precision."""
+    vals = _assemble_sharded_vals(plan, form, weakform.MATRIX, mesh,
+                                  axis_name, coords)
+    return plan.csr(vals)
+
+
+def assemble_rhs_sharded(plan: AssemblyPlan, form, mesh=None,
+                         axis_name: str | None = None,
+                         coords=None) -> jnp.ndarray:
+    """Sharded linear-form assembly (see :func:`assemble_sharded`)."""
+    return _assemble_sharded_vals(plan, form, weakform.VECTOR, mesh,
+                                  axis_name, coords)
+
+
+def clear_assembly_caches():
+    """Drop the functional core's compiled-executable cache.
+
+    The pure entry points key executables on identity-hashed ``PlanStatic``
+    aux + form signature in a module-level FIFO-bounded cache (shared with
+    the :class:`GalerkinAssembler` facade), so each cached entry retains its
+    plan's tables and executable.  The bound caps growth automatically;
+    sweeps that mint many short-lived plans (mesh-refinement studies) can
+    call this to release everything at once.  Also drops the sparse
+    pattern-array device mirrors, which pin host+device copies of each
+    pattern that flowed through matvec/solve.
+    """
+    from .sparse import clear_device_mirrors
+
+    _FORM_FNS.clear()
+    clear_device_mirrors()
+
+
+# ---------------------------------------------------------------------------
+# The assembler facade (cache-owning; every pre-plan call site keeps working)
+# ---------------------------------------------------------------------------
+
+class GalerkinAssembler:
+    """Thin cache-owning facade over an :class:`AssemblyPlan`.
+
+    One instance per (mesh topology × element × quadrature) signature.  All
+    tables live in ``self.plan`` — the class adds only the per-signature jit
+    cache (`n_traces` retrace accounting) and the historical method surface.
+    Re-instantiating for a same-signature mesh reuses XLA executables via
+    jit's cache (shape-bucketed compilation, DESIGN §2).
+    """
+
+    def __init__(self, space: FunctionSpace, quad_order: int | None = None,
+                 reduce_mode: str = "direct"):
+        self.space = space
+        self.mesh = space.mesh
+        self.element = space.element
+        self.reduce_mode = reduce_mode
+
+        self.plan = build_plan(space, quad_order, reduce_mode)
+        st = self.plan.static
+        # compatibility aliases onto the plan's static tables
+        self.w, self.phi, self.gradhat = st.w, st.phi, st.gradhat
+        self.geo_phi, self.geo_grad = st.geo_phi, st.geo_grad
+        self.coords = self.plan.coords
+        self._scalar_cell_dofs = st.scalar_cell_dofs
+        self.mat_routing = st.mat_routing
+        self.vec_routing = st.vec_routing
+
+        # One compiled executable per (plan, form signature), owned by the
+        # module-level jit cache and SHARED with the pure assemble()/
+        # assemble_rhs() entry points.  n_traces counts retraces — repeated
+        # assembly with new coefficient *values* must not grow it.  Callable
+        # coefficients are part of the signature (identity-keyed): per-call
+        # lambdas each compile fresh, so hot loops should reuse stable
+        # function objects (or pre-evaluate callables to quadrature arrays,
+        # as MixedBCPoisson does); clear_assembly_caches() releases the
+        # accumulated executables.
+        self.n_traces = 0
+
+    # -- context -------------------------------------------------------------
+    def context(self, coords: jnp.ndarray | None = None) -> forms.FormContext:
+        return self.plan.context(coords)
+
+    def csr(self, vals: jnp.ndarray) -> CSR:
+        return self.plan.csr(vals)
 
     # -- form API: one fused Map, one Reduce, jit-cached per signature --------
     def assemble(self, form, coords=None) -> CSR:
@@ -276,107 +832,73 @@ class GalerkinAssembler:
         terms) into a global ``(num_dofs,)`` vector — same fused pipeline."""
         return self._assemble_vals(form, weakform.VECTOR, coords)
 
+    def assemble_batched(self, form, coords_batch=None,
+                         leaves_batch=None) -> BatchedCSR:
+        """Batched multi-instance assembly — see :func:`assemble_batched`."""
+        return assemble_batched(self.plan, form, coords_batch, leaves_batch)
+
+    def assemble_rhs_batched(self, form, coords_batch=None,
+                             leaves_batch=None) -> jnp.ndarray:
+        """Batched linear forms — see :func:`assemble_rhs_batched`."""
+        return assemble_rhs_batched(self.plan, form, coords_batch, leaves_batch)
+
+    def assemble_sharded(self, form, mesh=None,
+                         axis_name: str | None = None) -> CSR:
+        """Element-parallel multi-device assembly — see
+        :func:`assemble_sharded`."""
+        return assemble_sharded(self.plan, form, mesh, axis_name)
+
     def _assemble_vals(self, form, arity: str, coords=None):
+        """Delegate to the module-level jitted core so the facade and the
+        pure ``assemble(plan, form)`` entry point share ONE executable per
+        (plan, signature); ``n_traces`` is derived from the core's trace
+        counter (a delta of zero means the executable was reused)."""
         spec, leaves = weakform.lower(form, arity)
-        if coords is not None and any(domain is not None for _, domain, _ in spec):
-            # facet geometry comes from the FacetAssembler's construction-time
-            # coords; silently mixing it with overridden volume coords would
-            # give inconsistent values and zero boundary coordinate gradients
-            raise NotImplementedError(
-                "assemble(form, coords=...) does not support facet terms: "
-                "boundary geometry is fixed at FacetAssembler construction"
-            )
-        fn = self._form_cache.get((arity, spec))
-        if fn is None:
-            while len(self._form_cache) >= self._form_cache_limit:
-                self._form_cache.pop(next(iter(self._form_cache)))
-            fn = self._build_form_fn(spec, arity)
-            self._form_cache[(arity, spec)] = fn
-        return fn(leaves, self.coords if coords is None else coords)
-
-    def _build_form_fn(self, spec, arity: str):
-        """Close over one static form signature; jit over (leaves, coords)."""
-        vs = self.space.value_size
-        # facet-domain precompute (numpy, once per signature): injection of
-        # each facet pattern into the volume CSR pattern
-        injections = {}
-        for _, domain, _ in spec:
-            if domain is not None and arity == weakform.MATRIX:
-                if domain not in injections:
-                    injections[domain] = jnp.asarray(
-                        domain.injection_into(self.mat_routing)
-                    )
-
-        def run(leaves, coords):
-            self.n_traces += 1
-            ctx = self.context(coords)
-            leaf = iter(leaves)
-            facet_ctxs: dict = {}
-            local_sum = None            # fused volume Map accumulator
-            facet_sums: dict = {}       # domain -> facet Map accumulator
-            for kind, domain, desc in spec:
-                vals = [next(leaf) if d == weakform.TRACED else d[1] for d in desc]
-                *coeffs, scale = vals
-                if domain is None:
-                    tctx = ctx
-                else:
-                    if domain not in facet_ctxs:
-                        facet_ctxs[domain] = domain.context()
-                    tctx = facet_ctxs[domain]
-                kern = weakform.KERNELS[kind].fn
-                local = kern(tctx, vs, *coeffs) * jnp.asarray(scale)
-                if domain is None:
-                    if local_sum is not None and local_sum.shape != local.shape:
-                        raise ValueError(
-                            f"term '{kind}' local shape {local.shape} does not "
-                            f"match earlier terms {local_sum.shape} — scalar "
-                            "and vector-valued kernels cannot be fused"
-                        )
-                    local_sum = local if local_sum is None else local_sum + local
-                else:
-                    prev = facet_sums.get(domain)
-                    facet_sums[domain] = local if prev is None else prev + local
-
-            if arity == weakform.MATRIX:
-                out = (
-                    reduce_matrix(local_sum, self.mat_routing, self.reduce_mode)
-                    if local_sum is not None
-                    else jnp.zeros((self.mat_routing.nnz,))
-                )
-                for domain, loc in facet_sums.items():
-                    fvals = reduce_matrix(loc, domain.mat_routing, self.reduce_mode)
-                    out = out.at[injections[domain]].add(fvals.astype(out.dtype))
-                return out
-            out = (
-                reduce_vector(local_sum, self.vec_routing, self.reduce_mode)
-                if local_sum is not None
-                else jnp.zeros((self.space.num_dofs,))
-            )
-            for domain, loc in facet_sums.items():
-                out = out + reduce_vector(loc, domain.vec_routing, self.reduce_mode)
-            return out
-
-        return jax.jit(run)
+        _check_facet_coords(spec, coords)
+        before = n_core_traces()
+        out = _assemble_flat(
+            self.plan.coords if coords is None else coords, leaves,
+            static=self.plan.static, spec=spec, arity=arity,
+        )
+        self.n_traces += n_core_traces() - before
+        return out
 
     # -- deprecated shims over the form API -----------------------------------
+    @staticmethod
+    def _warn_deprecated(name: str, replacement: str):
+        warnings.warn(
+            f"GalerkinAssembler.{name} is deprecated; use {replacement}",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+
     def assemble_stiffness(self, rho=None, coords=None) -> CSR:
         """Deprecated: use ``assemble(weakform.diffusion(rho))``."""
+        self._warn_deprecated("assemble_stiffness", "assemble(weakform.diffusion(rho))")
         return self.assemble(weakform.diffusion(rho), coords)
 
     def assemble_mass(self, c=None, coords=None) -> CSR:
         """Deprecated: use ``assemble(weakform.mass(c))``."""
+        self._warn_deprecated("assemble_mass", "assemble(weakform.mass(c))")
         return self.assemble(weakform.mass(c), coords)
 
     def assemble_elasticity(self, lam: float, mu: float, scale=None, coords=None) -> CSR:
         """Deprecated: use ``assemble(weakform.elasticity(lam, mu, scale))``."""
+        self._warn_deprecated(
+            "assemble_elasticity", "assemble(weakform.elasticity(lam, mu, scale))"
+        )
         return self.assemble(weakform.elasticity(lam, mu, scale), coords)
 
     def assemble_load(self, f=None, coords=None) -> jnp.ndarray:
         """Deprecated: use ``assemble_rhs(weakform.source(f))``."""
+        self._warn_deprecated("assemble_load", "assemble_rhs(weakform.source(f))")
         return self.assemble_rhs(weakform.source(f), coords)
 
     def assemble_reaction_load(self, u_nodal, fn) -> jnp.ndarray:
         """Deprecated: use ``assemble_rhs(weakform.reaction(u_nodal, fn))``."""
+        self._warn_deprecated(
+            "assemble_reaction_load", "assemble_rhs(weakform.reaction(u_nodal, fn))"
+        )
         return self.assemble_rhs(weakform.reaction(u_nodal, fn))
 
     # -- baselines (paper Fig. 1 "white box") ----------------------------------

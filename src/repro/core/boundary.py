@@ -44,6 +44,9 @@ class DirichletCondenser:
         assert np.all(diag_of_bc >= 0), "constrained DoF missing diagonal entry"
         self.diag_of_bc = jnp.asarray(diag_of_bc)
         self.free_mask = jnp.asarray(~is_bc, dtype=float)
+        # device mirrors staged once (not per traced call)
+        self._bc_dofs_dev = jnp.asarray(self.bc_dofs)
+        self._is_bc_dev = jnp.asarray(is_bc)
 
     def boundary_field(self, values, dtype=None) -> jnp.ndarray:
         """Expand Dirichlet data to a full ``(num_dofs,)`` field ``u_D``.
@@ -57,13 +60,13 @@ class DirichletCondenser:
         values = jnp.asarray(values, dtype=dtype)
         u_d = jnp.zeros(self.num_dofs, dtype=values.dtype)
         if values.ndim == 0:
-            return u_d.at[jnp.asarray(self.bc_dofs)].set(values)
+            return u_d.at[self._bc_dofs_dev].set(values)
         if values.shape == (self.bc_dofs.shape[0],):
-            return u_d.at[jnp.asarray(self.bc_dofs)].set(values)
+            return u_d.at[self._bc_dofs_dev].set(values)
         if values.shape == (self.num_dofs,):
             # where(), not multiplication: free-DoF entries must be *ignored*,
             # even when non-finite (0 * NaN would leak into the lift matvec)
-            return jnp.where(jnp.asarray(self.is_bc), values, 0.0).astype(values.dtype)
+            return jnp.where(self._is_bc_dev, values, 0.0).astype(values.dtype)
         raise ValueError(f"un-interpretable Dirichlet value shape {values.shape}")
 
     def lift(self, k: CSR, f: jnp.ndarray, values=0.0) -> jnp.ndarray:
@@ -77,7 +80,7 @@ class DirichletCondenser:
         """
         u_d = self.boundary_field(values, dtype=f.dtype)
         f_lift = (f - k.matvec(u_d)) * self.free_mask
-        bc = jnp.asarray(self.bc_dofs)
+        bc = self._bc_dofs_dev
         return f_lift.at[bc].set(u_d[bc])
 
     def apply(self, k: CSR, f: jnp.ndarray, values=0.0) -> tuple[CSR, jnp.ndarray]:
@@ -85,8 +88,11 @@ class DirichletCondenser:
         return self.apply_matrix_only(k), self.lift(k, f, values)
 
     def apply_matrix_only(self, k: CSR) -> CSR:
+        """Mask constrained rows/columns, unit diagonal.  The masks broadcast
+        over leading axes, so this also condenses a whole ``BatchedCSR``
+        family ((B, nnz) vals) in one fused elementwise op."""
         vals = k.vals * self.keep_mask.astype(k.vals.dtype)
-        vals = vals.at[self.diag_of_bc].set(1.0)
+        vals = vals.at[..., self.diag_of_bc].set(1.0)
         return dataclasses.replace(k, vals=vals)
 
     def project_residual(self, r: jnp.ndarray) -> jnp.ndarray:
@@ -123,6 +129,7 @@ class FacetAssembler:
         self.gradhat = jnp.asarray(el.tabulate_grad(pts))
         self.facets = np.asarray(facets, dtype=np.int64)       # (F, 2) vertex ids
         self.coords = jnp.asarray(mesh.points[self.facets])    # (F, 2, d)
+        self._facet_dofs_dev = jnp.asarray(self.facets)
         self.vec_routing = build_vector_routing(self.facets, space.num_dofs)
         self.mat_routing = build_matrix_routing(self.facets, None, space.num_dofs)
         self._injections: dict = {}    # id(volume_routing) -> (routing, pos)
@@ -148,7 +155,7 @@ class FacetAssembler:
     def context(self) -> forms.FormContext:
         return facet_context(
             self.coords, self.phi, self.gradhat, self.w,
-            scalar_facet_dofs=jnp.asarray(self.facets),
+            scalar_facet_dofs=self._facet_dofs_dev,
         )
 
     def neumann_load(self, g) -> jnp.ndarray:

@@ -73,7 +73,9 @@ def eval_coefficient(coef, ctx: FormContext, vector_size: int | None = None):
     """
     e, q = ctx.detj.shape
     if coef is None:
-        return jnp.ones((e, q))
+        # unit coefficient in the context's dtype (a float32 geometry must
+        # not upcast the whole contraction to the x64 default)
+        return jnp.ones((e, q), dtype=ctx.detj.dtype)
     if callable(coef):
         out = coef(ctx.xq)
         return jnp.asarray(out)

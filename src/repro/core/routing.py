@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["MatrixRouting", "VectorRouting", "build_matrix_routing", "build_vector_routing"]
@@ -27,7 +28,13 @@ __all__ = ["MatrixRouting", "VectorRouting", "build_matrix_routing", "build_vect
 
 @dataclasses.dataclass(frozen=True)
 class MatrixRouting:
-    """Precomputed Sparse-Reduce for stiffness-matrix assembly."""
+    """Precomputed Sparse-Reduce for stiffness-matrix assembly.
+
+    The numpy fields are the host-side precompute (consumed by further numpy
+    setup: injections, condensers); the ``*_dev`` mirrors are the same arrays
+    staged to device once at construction, so every assembly trace reuses one
+    constant instead of re-staging an ``E·k²``-sized host array per trace.
+    """
 
     num_dofs: int
     nnz: int
@@ -39,16 +46,32 @@ class MatrixRouting:
     row_of_nnz: np.ndarray   # (nnz,) row index of each stored entry
     diag_pos: np.ndarray     # (num_dofs,) position of (i,i) in vals, -1 if absent
 
+    def __post_init__(self):
+        object.__setattr__(self, "perm_dev", jnp.asarray(self.perm))
+        object.__setattr__(self, "seg_ids_dev", jnp.asarray(self.seg_ids))
+        object.__setattr__(
+            self, "seg_ids_unsorted_dev", jnp.asarray(self.seg_ids_unsorted)
+        )
+
 
 @dataclasses.dataclass(frozen=True)
 class VectorRouting:
-    """Precomputed Sparse-Reduce for load-vector assembly."""
+    """Precomputed Sparse-Reduce for load-vector assembly (device mirrors as
+    in :class:`MatrixRouting`)."""
 
     num_dofs: int
     perm: np.ndarray
     seg_ids: np.ndarray
     seg_ids_unsorted: np.ndarray
     touched: np.ndarray      # (n_touched,) global dofs receiving contributions
+
+    def __post_init__(self):
+        object.__setattr__(self, "perm_dev", jnp.asarray(self.perm))
+        object.__setattr__(self, "seg_ids_dev", jnp.asarray(self.seg_ids))
+        object.__setattr__(
+            self, "seg_ids_unsorted_dev", jnp.asarray(self.seg_ids_unsorted)
+        )
+        object.__setattr__(self, "touched_dev", jnp.asarray(self.touched))
 
 
 def build_matrix_routing(

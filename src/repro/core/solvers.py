@@ -18,9 +18,16 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .sparse import CSR
+from .sparse import CSR, BatchedCSR, _dev
 
-__all__ = ["cg", "bicgstab", "jacobi_preconditioner", "sparse_solve", "SolveInfo"]
+__all__ = [
+    "cg",
+    "bicgstab",
+    "jacobi_preconditioner",
+    "sparse_solve",
+    "sparse_solve_batched",
+    "SolveInfo",
+]
 
 
 class SolveInfo(NamedTuple):
@@ -148,9 +155,27 @@ def _solve_bwd(method, tol, atol, maxiter, precond, res, g):
     # adjoint: Kᵀ λ = ḡ   (Eq. 11; sign handled by the chain rule caller)
     lam = _solve_impl(a, g, method, tol, atol, maxiter, precond, transpose=True)
     # ∂L/∂vals = −λ_r · x_c at each stored (r, c) — never densified
-    dvals = -lam[jnp.asarray(a.row_of_nnz)] * x[jnp.asarray(a.indices)]
+    dvals = -lam[_dev(a.row_of_nnz)] * x[_dev(a.indices)]
     da = CSR(dvals, a.indptr, a.indices, a.row_of_nnz, a.shape, a.diag_pos)
     return (da, lam)
 
 
 sparse_solve.defvjp(_solve_fwd, _solve_bwd)
+
+
+def sparse_solve_batched(a: BatchedCSR, b, method="bicgstab", tol=1e-10,
+                         atol=1e-10, maxiter=10000, precond="jacobi"):
+    """X_b = A_b⁻¹ b_b over a :class:`BatchedCSR` family — one ``vmap`` of the
+    differentiable :func:`sparse_solve`, so the B Krylov solves share a
+    single XLA executable (and a single adjoint executable under ``grad``).
+
+    ``b`` is ``(B, n)`` per-instance or ``(n,)`` shared; returns ``(B, n)``.
+    """
+    b = jnp.asarray(b)
+    in_b = None if b.ndim == 1 else 0
+    return jax.vmap(
+        lambda ab, bi: sparse_solve(
+            ab.as_csr(), bi, method, tol, atol, maxiter, precond
+        ),
+        in_axes=(0, in_b),
+    )(a, b)

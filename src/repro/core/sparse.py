@@ -1,8 +1,11 @@
-"""Sparse containers (CSR / ELL) as jax pytrees, with SpMV/SpMM.
+"""Sparse containers (CSR / ELL / BatchedCSR) as jax pytrees, with SpMV/SpMM.
 
 The CSR *pattern* (indptr/indices/row ids) is static numpy baked at setup —
 only ``vals`` is traced, preserving the paper's O(1)-graph property: the
 sparse operator participates in autodiff through a single dense value vector.
+:class:`BatchedCSR` extends this to *families* of same-pattern operators:
+one shared static pattern, ``(B, nnz)`` traced values — the container behind
+``assemble_batched`` and the vmapped ``sparse_solve``.
 """
 
 from __future__ import annotations
@@ -14,7 +17,37 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["CSR", "ELL", "csr_to_ell"]
+__all__ = ["CSR", "ELL", "BatchedCSR", "csr_to_ell"]
+
+
+# device mirrors of static numpy pattern arrays, keyed by id: staged to the
+# device once instead of per traced call.  The numpy key array is kept alive
+# by the strong reference so ids cannot be recycled while cached; the cache
+# is FIFO-bounded because some callers mint fresh pattern arrays per call
+# (e.g. csr_to_ell cols in a solve loop) — eviction just costs a re-stage.
+_DEVICE_MIRRORS: dict[int, tuple[np.ndarray, jnp.ndarray]] = {}
+_DEVICE_MIRRORS_LIMIT = 512
+
+
+def _dev(x) -> jnp.ndarray:
+    if isinstance(x, jnp.ndarray):
+        return x
+    hit = _DEVICE_MIRRORS.get(id(x))
+    if hit is not None:
+        return hit[1]
+    arr = jnp.asarray(x)
+    if isinstance(arr, jax.core.Tracer):
+        return arr  # converted inside a trace: constant-folded there, not cached
+    while len(_DEVICE_MIRRORS) >= _DEVICE_MIRRORS_LIMIT:
+        _DEVICE_MIRRORS.pop(next(iter(_DEVICE_MIRRORS)))
+    _DEVICE_MIRRORS[id(x)] = (x, arr)
+    return arr
+
+
+def clear_device_mirrors():
+    """Release every cached (host, device) pattern-array pair — part of the
+    ``repro.core.clear_assembly_caches`` memory-release path."""
+    _DEVICE_MIRRORS.clear()
 
 
 @jax.tree_util.register_pytree_node_class
@@ -40,39 +73,35 @@ class CSR:
     # -- ops ---------------------------------------------------------------
     def matvec(self, x: jnp.ndarray) -> jnp.ndarray:
         """y = A @ x via gather + sorted segment-sum (deterministic)."""
-        contrib = self.vals * x[self.indices]
+        contrib = self.vals * x[_dev(self.indices)]
         return jax.ops.segment_sum(
             contrib,
-            self.row_of_nnz,
+            _dev(self.row_of_nnz),
             num_segments=self.shape[0],
             indices_are_sorted=True,
         )
 
     def rmatvec(self, x: jnp.ndarray) -> jnp.ndarray:
         """y = A.T @ x (scatter over columns)."""
-        contrib = self.vals * x[self.row_of_nnz]
+        contrib = self.vals * x[_dev(self.row_of_nnz)]
         return jax.ops.segment_sum(
-            contrib, self.indices, num_segments=self.shape[1]
+            contrib, _dev(self.indices), num_segments=self.shape[1]
         )
 
     def matmat(self, x: jnp.ndarray) -> jnp.ndarray:
         """Y = A @ X for X (n, b) — batched multi-RHS SpMM."""
-        contrib = self.vals[:, None] * x[self.indices]
+        contrib = self.vals[:, None] * x[_dev(self.indices)]
         return jax.ops.segment_sum(
             contrib,
-            self.row_of_nnz,
+            _dev(self.row_of_nnz),
             num_segments=self.shape[0],
             indices_are_sorted=True,
         )
 
     def diagonal(self) -> jnp.ndarray:
         assert self.diag_pos is not None, "diagonal positions not precomputed"
-        d = jnp.where(
-            jnp.asarray(self.diag_pos) >= 0,
-            self.vals[jnp.clip(jnp.asarray(self.diag_pos), 0)],
-            0.0,
-        )
-        return d
+        dp = _dev(self.diag_pos)
+        return jnp.where(dp >= 0, self.vals[jnp.clip(dp, 0)], 0.0)
 
     def to_dense(self) -> jnp.ndarray:
         out = jnp.zeros(self.shape, dtype=self.vals.dtype)
@@ -89,6 +118,120 @@ class CSR:
     @property
     def nnz(self) -> int:
         return int(self.indices.shape[0])
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class BatchedCSR:
+    """B same-pattern sparse operators: shared static pattern, ``(B, nnz)``
+    traced values — produced by ``assemble_batched`` over a family of
+    coefficient sets / geometries.
+
+    The aux layout is identical to :class:`CSR`, so condensers and other
+    vals-elementwise transforms apply unchanged (masks broadcast over the
+    batch axis), and ``jax.vmap(fn, in_axes=0)`` over a ``BatchedCSR`` hands
+    ``fn`` a per-instance slice — :meth:`as_csr` converts that slice to a
+    :class:`CSR` for single-instance code (solvers, integrators).
+    """
+
+    vals: jnp.ndarray            # (B, nnz) traced
+    indptr: np.ndarray           # static (shared by all instances)
+    indices: np.ndarray          # static
+    row_of_nnz: np.ndarray       # static, (nnz,)
+    shape: tuple[int, int]       # static, per-instance shape
+    diag_pos: np.ndarray | None = None  # static
+
+    # -- pytree ----------------------------------------------------------
+    def tree_flatten(self):
+        aux = (self.indptr, self.indices, self.row_of_nnz, self.shape, self.diag_pos)
+        return (self.vals,), aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        (vals,) = children
+        return cls(vals, *aux)
+
+    # -- constructors / views ---------------------------------------------
+    @classmethod
+    def stack(cls, csrs) -> "BatchedCSR":
+        """Stack same-pattern :class:`CSR` instances along a new batch axis.
+
+        Patterns must actually match (content, not just nnz count) — two
+        different meshes can share an nnz by coincidence, and pairing one
+        pattern with the other's values would be silently wrong.
+        """
+        csrs = list(csrs)
+        first = csrs[0]
+        for c in csrs[1:]:
+            same = c.shape == first.shape and (
+                c.indices is first.indices
+                or (
+                    np.array_equal(c.indices, first.indices)
+                    and np.array_equal(c.indptr, first.indptr)
+                )
+            )
+            if not same:
+                raise ValueError(
+                    "BatchedCSR.stack: CSR sparsity patterns differ — all "
+                    "instances must share one (mesh topology × space) pattern"
+                )
+        return cls(
+            vals=jnp.stack([c.vals for c in csrs]),
+            indptr=first.indptr,
+            indices=first.indices,
+            row_of_nnz=first.row_of_nnz,
+            shape=first.shape,
+            diag_pos=first.diag_pos,
+        )
+
+    def as_csr(self) -> CSR:
+        """Reinterpret as a single :class:`CSR` sharing this pattern — valid
+        when ``vals`` is one instance's ``(nnz,)`` slice (e.g. inside a
+        ``vmap`` over the batch axis)."""
+        return CSR(self.vals, self.indptr, self.indices, self.row_of_nnz,
+                   self.shape, self.diag_pos)
+
+    def __getitem__(self, b):
+        """Integer index → one instance as a :class:`CSR`; slice → the
+        sub-family as a :class:`BatchedCSR`."""
+        if isinstance(b, (int, np.integer)):
+            return CSR(self.vals[b], self.indptr, self.indices,
+                       self.row_of_nnz, self.shape, self.diag_pos)
+        if isinstance(b, slice):
+            return BatchedCSR(self.vals[b], self.indptr, self.indices,
+                              self.row_of_nnz, self.shape, self.diag_pos)
+        raise TypeError(
+            f"BatchedCSR indices must be int or slice, got {type(b).__name__}"
+        )
+
+    @property
+    def batch(self) -> int:
+        return int(self.vals.shape[0])
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indices.shape[0])
+
+    # -- ops ---------------------------------------------------------------
+    def matvec(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Y_b = A_b @ x_b for ``x: (B, n)`` (``(n,)`` broadcasts across the
+        batch) — one vmapped gather + segment-sum."""
+        in_x = None if x.ndim == 1 else 0
+        return jax.vmap(lambda v, xi: self._one(v).matvec(xi),
+                        in_axes=(0, in_x))(self.vals, x)
+
+    def _one(self, vals) -> CSR:
+        return CSR(vals, self.indptr, self.indices, self.row_of_nnz,
+                   self.shape, self.diag_pos)
+
+    def diagonal(self) -> jnp.ndarray:
+        assert self.diag_pos is not None, "diagonal positions not precomputed"
+        dp = _dev(self.diag_pos)
+        return jnp.where(dp >= 0, self.vals[:, jnp.clip(dp, 0)], 0.0)
+
+    def to_dense(self) -> jnp.ndarray:
+        out = jnp.zeros((self.batch,) + self.shape, dtype=self.vals.dtype)
+        return out.at[:, _dev(self.row_of_nnz), _dev(self.indices)].set(self.vals)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -110,7 +253,7 @@ class ELL:
         return cls(vals, *aux)
 
     def matvec(self, x: jnp.ndarray) -> jnp.ndarray:
-        return jnp.sum(self.vals * x[jnp.asarray(self.cols)], axis=1)
+        return jnp.sum(self.vals * x[_dev(self.cols)], axis=1)
 
 
 def csr_to_ell(csr: CSR) -> ELL:

@@ -1,8 +1,15 @@
 from .siren import siren_apply, siren_init  # noqa: F401
 from .losses import (  # noqa: F401
+    BatchedGalerkinResidualLoss,
     GalerkinResidualLoss,
     deep_ritz_loss,
     pinn_poisson_loss,
     vpinn_loss,
 )
-from .training import adam_init, adam_update, train_adam, lbfgs_minimize  # noqa: F401
+from .training import (  # noqa: F401
+    adam_init,
+    adam_update,
+    fit_family,
+    lbfgs_minimize,
+    train_adam,
+)

@@ -23,7 +23,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import DirichletCondenser, GalerkinAssembler, weakform as wf
+from ..core import (
+    DirichletCondenser,
+    GalerkinAssembler,
+    assemble_batched,
+    assemble_rhs,
+    assemble_rhs_batched,
+    sparse_solve_batched,
+    weakform as wf,
+)
 from ..core.assembly import reduce_vector
 
 __all__ = [
@@ -31,6 +39,7 @@ __all__ = [
     "vpinn_loss",
     "deep_ritz_loss",
     "GalerkinResidualLoss",
+    "BatchedGalerkinResidualLoss",
 ]
 
 
@@ -133,5 +142,62 @@ class GalerkinResidualLoss:
         """Hard-constrained: predicted values are *overwritten* on Dirichlet
         DoFs (system reduction), so no boundary penalty exists."""
         u = u_fn(params, self.dof_points)[:, 0]
+        u = u * self.bc.free_mask + self.f * (1.0 - self.bc.free_mask)
+        return self(u)
+
+
+class BatchedGalerkinResidualLoss:
+    """Family-of-instances TensorPILS objective (Eq. B.22): B per-sample
+    systems K(ρ_b) U_b = F_b with the per-sample matrices assembled in
+    **one batched call** (shared static pattern, ``(B, nnz)`` values) and
+    condensed with the shared static Dirichlet masks.
+
+    The loss of a ``(B, num_dofs)`` prediction batch is the mean squared
+    Galerkin residual over the family — one vmapped SpMV, one executable,
+    zero AD passes through space.  Homogeneous Dirichlet BCs (hard
+    constraints via condensation, matching :class:`GalerkinResidualLoss`).
+    """
+
+    def __init__(self, asm: GalerkinAssembler, bc: DirichletCondenser,
+                 rho_batch, f=1.0, f_batch=None):
+        plan = asm.plan
+        rho_batch = jnp.asarray(rho_batch)
+        kb = assemble_batched(
+            plan, wf.diffusion(rho_batch[0]), leaves_batch=(rho_batch, None)
+        )
+        self.k = bc.apply_matrix_only(kb)       # masks broadcast over (B, nnz)
+        if f_batch is not None:
+            f_batch = jnp.asarray(f_batch)
+            load = assemble_rhs_batched(
+                plan, wf.source(f_batch[0]), leaves_batch=(f_batch, None)
+            )
+        else:
+            load = assemble_rhs(plan, wf.source(f))
+        # homogeneous lift: F ← F·free_mask (u_D = 0, so the K·u_D matvec is
+        # identically zero and the bc rows of F become the bc values)
+        self.f = bc.project_residual(load)
+        self.bc = bc
+        self.batch = int(rho_batch.shape[0])
+        self.dof_points = jnp.asarray(asm.space.dof_points)
+
+    def residual(self, u_batch: jnp.ndarray) -> jnp.ndarray:
+        return self.k.matvec(u_batch) - self.f
+
+    def __call__(self, u_batch: jnp.ndarray) -> jnp.ndarray:
+        r = self.residual(u_batch)
+        return jnp.mean(jnp.sum(r**2, axis=-1))
+
+    def solve(self, tol=1e-10, maxiter=10000) -> jnp.ndarray:
+        """Direct FEM solutions of the whole family — one vmapped adjoint
+        solve (reference targets / sanity checks for the learned U_b)."""
+        return sparse_solve_batched(self.k, self.f, "cg", tol, tol, maxiter)
+
+    def loss_from_net(self, u_fn, params_batch) -> jnp.ndarray:
+        """Hard-constrained family loss for B per-instance backbones: each
+        parameter set predicts its instance's coefficients at the DoF
+        coordinates, Dirichlet rows are overwritten by condensation (no
+        boundary penalty) — the batched twin of
+        :meth:`GalerkinResidualLoss.loss_from_net`."""
+        u = jax.vmap(lambda p: u_fn(p, self.dof_points)[:, 0])(params_batch)
         u = u * self.bc.free_mask + self.f * (1.0 - self.bc.free_mask)
         return self(u)

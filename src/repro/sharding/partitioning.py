@@ -23,6 +23,7 @@ import dataclasses
 import threading
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from ..models.layers import P as ParamP, is_spec
@@ -31,11 +32,41 @@ __all__ = [
     "ShardingRules",
     "RULES_SINGLE_POD",
     "RULES_MULTI_POD",
+    "FEM_MESH_AXIS",
+    "fem_mesh",
     "use_rules",
     "annotate",
     "logical_to_spec",
     "make_shardings",
 ]
+
+# ---------------------------------------------------------------------------
+# FEM mesh axis: element-parallel Galerkin assembly
+# ---------------------------------------------------------------------------
+
+#: the named mesh axis over which ``repro.core.assemble_sharded`` partitions
+#: the element axis of the Batch-Map stage (one 1-D axis — FEM assembly is
+#: embarrassingly element-parallel; the Reduce is a single all-reduce of
+#: partial nnz contributions)
+FEM_MESH_AXIS = "elem"
+
+
+def fem_mesh(n_devices: int | None = None, axis_name: str = FEM_MESH_AXIS) -> Mesh:
+    """1-D device mesh for element-parallel sharded assembly.
+
+    Uses all local devices by default; emulate a multi-device CPU host with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the CI sharded
+    job does exactly this).
+    """
+    devices = jax.devices()
+    if n_devices is not None:
+        if n_devices > len(devices):
+            raise ValueError(
+                f"fem_mesh: requested {n_devices} devices but only "
+                f"{len(devices)} are available"
+            )
+        devices = devices[:n_devices]
+    return Mesh(np.array(devices), (axis_name,))
 
 
 @dataclasses.dataclass(frozen=True)

@@ -22,15 +22,16 @@ CSR operators; per-step solves go through ``sparse_solve`` (adjoint
 backward pass), so trajectories differentiate w.r.t. coefficients, initial
 conditions, and mesh coordinates.  :func:`batched_rollout` vmaps a rollout
 over a batch of initial conditions; to batch over coefficient fields,
-construct the integrator *inside* the vmapped function::
+assemble the per-instance effective operators in ONE call
+(``repro.core.assemble_batched`` → :class:`~repro.core.sparse.BatchedCSR`)
+and roll the family out with :func:`batched_theta_rollout`::
 
-    def traj(kappa, u0):
-        # fused θ operators, one jit signature across the batch trace
-        integ = ThetaIntegrator.from_form(asm, weakform.diffusion(kappa),
-                                          dt=dt, theta=0.5, bc=bc)
-        return integ.rollout(u0, n_steps)
-
-    trajs = jax.vmap(traj)(kappa_batch, u0_batch)   # (B, T, N)
+    lhs = assemble_batched(plan, wf.mass(1.0) + (theta * dt) * wf.diffusion(k0),
+                           leaves_batch=(None, None, kappa_batch, None))
+    rhs = assemble_batched(plan, wf.mass(1.0) - ((1 - theta) * dt) * wf.diffusion(k0),
+                           leaves_batch=(None, None, kappa_batch, None))
+    trajs = batched_theta_rollout(lhs, rhs, u0_batch, n_steps, dt=dt,
+                                  theta=theta, bc=bc)       # (B, T, N)
 """
 
 from __future__ import annotations
@@ -49,6 +50,7 @@ __all__ = [
     "BACKWARD_EULER",
     "CRANK_NICOLSON",
     "batched_rollout",
+    "batched_theta_rollout",
     "segmented_scan",
     "axpy_csr",
     "make_matvec",
@@ -62,3 +64,29 @@ def batched_rollout(integrator, u0_batch, n_steps: int, **rollout_kwargs):
     return jax.vmap(
         lambda u0: integrator.rollout(u0, n_steps, **rollout_kwargs)
     )(u0_batch)
+
+
+def batched_theta_rollout(lhs_full, rhs_op, u0_batch, n_steps: int, *, dt,
+                          theta: float = BACKWARD_EULER, bc=None, loads=None,
+                          bc_values=None, checkpoint_every: int | None = None,
+                          **integrator_kwargs):
+    """θ-rollouts for a *family* of problem instances over
+    :class:`~repro.core.sparse.BatchedCSR` effective operators.
+
+    ``lhs_full`` / ``rhs_op`` hold the B per-instance operators
+    ``M + θΔtK_b`` / ``M − (1−θ)ΔtK_b`` on one shared static pattern (from
+    ``assemble_batched``); the whole family rolls out in one vmapped
+    ``lax.scan`` — a single XLA executable, no per-instance re-vmapping of
+    raw value vectors.  ``u0_batch: (B, N) → (B, n_steps, N)``; ``loads`` /
+    ``bc_values`` are shared across the batch.
+    """
+
+    def one(lhs_b, rhs_b, u0):
+        integ = ThetaIntegrator(
+            None, None, dt, theta=theta, bc=bc,
+            lhs_full=lhs_b.as_csr(), rhs_op=rhs_b.as_csr(), **integrator_kwargs,
+        )
+        return integ.rollout(u0, n_steps, loads=loads, bc_values=bc_values,
+                             checkpoint_every=checkpoint_every)
+
+    return jax.vmap(one)(lhs_full, rhs_op, u0_batch)

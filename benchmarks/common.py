@@ -15,6 +15,12 @@ import time
 import jax
 
 
+def is_quick() -> bool:
+    """True when the harness runs in reduced-size mode (``--quick`` /
+    ``BENCH_QUICK=1``) — the perf-smoke CI subset."""
+    return os.environ.get("BENCH_QUICK", "") not in ("", "0")
+
+
 def time_fn(fn, *args, warmup: int = 1, iters: int = 5, **kw) -> float:
     """Median wall-time (µs) of fn(*args) with block_until_ready."""
     for _ in range(warmup):

@@ -1,0 +1,149 @@
+"""Perf-regression gate: compare a BENCH_JSON run against a committed baseline.
+
+Usage (the perf-smoke CI job):
+
+    BENCH_JSON=bench_results.json python -m benchmarks.run --only matfree --quick
+    python -m benchmarks.compare bench_results.json
+
+Every row in the baseline is *tracked*: it must appear in the results, and
+its slowdown must not exceed ``tolerance ×`` (default 1.5, overridable
+with ``--tolerance`` or ``BENCH_TOLERANCE``).  Because the committed
+baseline is usually recorded on a different machine than the CI runner,
+per-row ratios are **normalized by a machine scale** before gating: the
+median ratio of the baseline's *reference rows* (records carrying
+``"reference": true`` — the CSR SpMV rows, whose code the PRs under test
+rarely touch).  A runner that is uniformly 2× slower shifts references
+and gated rows equally and still passes, while gated rows regressing
+relative to the references are caught — normalizing over *all* rows
+instead would let a regression across the whole gated subsystem shift the
+median itself and slip through.  Without any reference rows the scale
+falls back to the median over everything (same-machine semantics);
+``--no-normalize`` gates raw ratios.  Rows in the results that are not in
+the baseline are reported but never fail the gate.
+
+Refreshing the baseline after an intentional perf change:
+
+    BENCH_JSON=bench_results.json python -m benchmarks.run --only matfree --quick
+    python -m benchmarks.compare bench_results.json --update-baseline
+
+then commit ``benchmarks/BENCH_baseline.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "BENCH_baseline.json")
+
+
+def load_rows(path: str) -> dict[str, dict]:
+    """JSON-lines → {name: record}; a repeated name keeps the last record."""
+    rows: dict[str, dict] = {}
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                rec = json.loads(line)
+                rows[rec["name"]] = rec
+    return rows
+
+
+def _median(xs: list[float]) -> float:
+    xs = sorted(xs)
+    mid = len(xs) // 2
+    return xs[mid] if len(xs) % 2 else 0.5 * (xs[mid - 1] + xs[mid])
+
+
+def compare(results: dict[str, dict], baseline: dict[str, dict],
+            tolerance: float, normalize: bool = True) -> list[str]:
+    failures = []
+    ratios = {
+        name: results[name]["us_per_call"] / base["us_per_call"]
+        for name, base in baseline.items()
+        if name in results
+    }
+    ref = [r for name, r in ratios.items() if baseline[name].get("reference")]
+    scale = 1.0
+    if normalize and ratios:
+        scale = _median(ref if ref else list(ratios.values()))
+        kind = f"{len(ref)} reference rows" if ref else f"all {len(ratios)} rows"
+        print(f"machine scale (median ratio over {kind}): {scale:.2f}x")
+    width = max((len(n) for n in baseline), default=4) + 2
+    print(f"{'row'.ljust(width)}{'baseline_us':>12}{'now_us':>12}"
+          f"{'ratio':>8}{'rel':>8}  status")
+    for name, base in sorted(baseline.items()):
+        rec = results.get(name)
+        if rec is None:
+            failures.append(f"{name}: tracked row missing from results")
+            print(f"{name.ljust(width)}{base['us_per_call']:>12}"
+                  f"{'—':>12}{'—':>8}{'—':>8}  MISSING")
+            continue
+        ratio = ratios[name]
+        rel = ratio / scale
+        ok = rel <= tolerance
+        status = "ok" if ok else f"SLOWDOWN > {tolerance:g}x"
+        print(
+            f"{name.ljust(width)}{base['us_per_call']:>12}"
+            f"{rec['us_per_call']:>12}{ratio:>8.2f}{rel:>8.2f}  {status}"
+        )
+        if not ok:
+            failures.append(
+                f"{name}: {rec['us_per_call']:.1f}us vs baseline "
+                f"{base['us_per_call']:.1f}us ({rel:.2f}x relative to the "
+                f"machine scale {scale:.2f}x > {tolerance:g}x)"
+            )
+    untracked = sorted(set(results) - set(baseline))
+    if untracked:
+        print(f"untracked (not gated): {', '.join(untracked)}")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("Usage")[0])
+    ap.add_argument("results", help="BENCH_JSON output of benchmarks.run")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument(
+        "--tolerance", type=float,
+        default=float(os.environ.get("BENCH_TOLERANCE", "1.5")),
+        help="max allowed us_per_call ratio vs baseline (default 1.5)",
+    )
+    ap.add_argument(
+        "--update-baseline", action="store_true",
+        help="rewrite the baseline from the results instead of comparing",
+    )
+    ap.add_argument(
+        "--no-normalize", action="store_true",
+        help="gate raw ratios (same-machine baseline) instead of "
+             "median-normalized ones",
+    )
+    args = ap.parse_args(argv)
+
+    results = load_rows(args.results)
+    if args.update_baseline:
+        with open(args.baseline, "w") as f:
+            for name in sorted(results):
+                f.write(json.dumps(results[name]) + "\n")
+        print(f"baseline updated: {args.baseline} ({len(results)} rows)")
+        return 0
+
+    if not os.path.exists(args.baseline):
+        print(f"no baseline at {args.baseline}; run with --update-baseline first",
+              file=sys.stderr)
+        return 2
+    failures = compare(results, load_rows(args.baseline), args.tolerance,
+                       normalize=not args.no_normalize)
+    if failures:
+        print("\nPERF REGRESSION:", file=sys.stderr)
+        for fail in failures:
+            print(f"  {fail}", file=sys.stderr)
+        return 1
+    print(f"\nall {len(load_rows(args.baseline))} tracked rows within "
+          f"{args.tolerance:g}x of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -13,14 +13,39 @@ Prints ``name,us_per_call,derived`` CSV rows.  Module → paper artifact map:
   bench_transient          — repro.transient rollouts (heat/wave, CSR vs ELL)
   bench_weakform           — fused multi-term WeakForm assemble vs separate+add
   bench_batched_assembly   — vmap-batched multi-instance assembly vs B singles
+  bench_matfree            — matrix-free apply/solve vs assembled CSR
   bench_dryrun_roofline    — harness roofline table (from dry-run JSON)
+
+Usage:
+  python -m benchmarks.run [--only PREFIX] [--quick]
+
+``--only matfree`` runs just the modules whose name contains the prefix
+(``bench_`` is implied); ``--quick`` switches modules to their reduced
+problem sizes (the perf-smoke CI subset).  ``BENCH_JSON=<path>`` appends
+machine-readable JSON-lines rows (compared against the committed
+``benchmarks/BENCH_baseline.json`` by ``benchmarks/compare.py``).
 """
 
+import argparse
+import os
 import sys
 import traceback
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("Usage:")[0])
+    ap.add_argument(
+        "--only", default=None, metavar="PREFIX",
+        help="run only modules whose name contains PREFIX (bench_ implied)",
+    )
+    ap.add_argument(
+        "--quick", action="store_true",
+        help="reduced problem sizes (sets BENCH_QUICK=1 for all modules)",
+    )
+    args = ap.parse_args(argv)
+    if args.quick:
+        os.environ["BENCH_QUICK"] = "1"
+
     from . import (
         bench_assembly_scaling,
         bench_batch_generation,
@@ -28,6 +53,7 @@ def main() -> None:
         bench_dryrun_roofline,
         bench_kernels,
         bench_loss_eval,
+        bench_matfree,
         bench_mixed_bc,
         bench_neural_solvers,
         bench_operator_learning,
@@ -50,8 +76,15 @@ def main() -> None:
         bench_transient,
         bench_weakform,
         bench_batched_assembly,
+        bench_matfree,
         bench_dryrun_roofline,
     ]
+    if args.only:
+        needle = args.only.removeprefix("bench_")
+        modules = [m for m in modules if needle in m.__name__]
+        if not modules:
+            print(f"no benchmark module matches --only {args.only!r}", file=sys.stderr)
+            sys.exit(2)
     print("name,us_per_call,derived")
     failed = []
     for mod in modules:

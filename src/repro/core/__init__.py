@@ -25,25 +25,41 @@ from .assembly import (  # noqa: E402,F401
 )
 from .boundary import DirichletCondenser, FacetAssembler  # noqa: E402,F401
 from .elements import ReferenceElement, get_element  # noqa: E402,F401
+from .matvec import (  # noqa: E402,F401
+    MATVEC_BACKENDS,
+    make_matvec,
+    make_residual,
+    matvec_backends,
+    register_matvec_backend,
+)
 from .mesh import (  # noqa: E402,F401
     FunctionSpace,
     Mesh,
     annulus_sector_tri,
+    box_hex,
     disk_tri,
     hollow_cube_tet,
     l_shape_tri,
     rectangle_quad,
     rectangle_tri,
+    unit_cube_hex,
     unit_cube_tet,
     unit_square_tri,
+)
+from .operator import (  # noqa: E402,F401
+    LinearOperator,
+    MatFreeOperator,
+    matfree_operator,
+    n_matfree_traces,
 )
 from .solvers import (  # noqa: E402,F401
     bicgstab,
     cg,
     jacobi_preconditioner,
+    matfree_solve,
     sparse_solve,
     sparse_solve_batched,
 )
-from .sparse import CSR, ELL, BatchedCSR, csr_to_ell  # noqa: E402,F401
+from .sparse import CSR, ELL, BatchedCSR, csr_to_ell, ell_layout  # noqa: E402,F401
 from . import weakform  # noqa: E402,F401
 from .weakform import WeakForm  # noqa: E402,F401

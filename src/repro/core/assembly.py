@@ -233,6 +233,7 @@ class PlanStatic:
     num_dofs: int
     value_size: int
     reduce_mode: str = "direct"
+    cell_dofs: jnp.ndarray | None = None  # (E, k) full DoF map (matrix-free gather)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -315,7 +316,9 @@ def build_plan(space: FunctionSpace, quad_order: int | None = None,
     """
     mesh, element = space.mesh, space.element
     pts, w = element.default_rule(quad_order)
-    geo_name = {"tri": "P1_tri", "tet": "P1_tet", "quad": "Q1_quad"}[mesh.cell_type]
+    geo_name = {
+        "tri": "P1_tri", "tet": "P1_tet", "quad": "Q1_quad", "hex": "Q1_hex",
+    }[mesh.cell_type]
     geo = get_element(geo_name)
 
     if space.value_size == 1:
@@ -337,6 +340,7 @@ def build_plan(space: FunctionSpace, quad_order: int | None = None,
         num_dofs=space.num_dofs,
         value_size=space.value_size,
         reduce_mode=reduce_mode,
+        cell_dofs=jnp.asarray(space.cell_dofs),
     )
     return AssemblyPlan(jnp.asarray(mesh.points[mesh.cells]), static)
 

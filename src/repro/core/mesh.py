@@ -22,6 +22,8 @@ __all__ = [
     "rectangle_tri",
     "rectangle_quad",
     "unit_cube_tet",
+    "box_hex",
+    "unit_cube_hex",
     "hollow_cube_tet",
     "l_shape_tri",
     "disk_tri",
@@ -38,6 +40,17 @@ _FACET_LOCAL = {
     "tri": np.array([[0, 1], [1, 2], [2, 0]]),
     "quad": np.array([[0, 1], [1, 2], [2, 3], [3, 0]]),
     "tet": np.array([[1, 2, 3], [0, 3, 2], [0, 1, 3], [0, 2, 1]]),
+    # Q1 hex corner order matches elements._HEX_CORNERS (z=0 quad then z=1)
+    "hex": np.array(
+        [
+            [0, 3, 2, 1],  # z = 0 (outward −z)
+            [4, 5, 6, 7],  # z = 1
+            [0, 1, 5, 4],  # y = 0
+            [3, 7, 6, 2],  # y = 1
+            [0, 4, 7, 3],  # x = 0
+            [1, 2, 6, 5],  # x = 1
+        ]
+    ),
 }
 
 
@@ -95,6 +108,12 @@ class Mesh:
             a = x[:, 1] - x[:, 0]
             b = x[:, 3] - x[:, 0]
             return np.abs(a[:, 0] * b[:, 1] - a[:, 1] * b[:, 0])
+        if self.cell_type == "hex":
+            # exact for parallelepipeds (all structured generators here)
+            a = x[:, 1] - x[:, 0]
+            b = x[:, 3] - x[:, 0]
+            c = x[:, 4] - x[:, 0]
+            return np.abs(np.einsum("ei,ei->e", a, np.cross(b, c)))
         raise ValueError(self.cell_type)
 
 
@@ -272,6 +291,38 @@ def unit_cube_tet(n: int) -> Mesh:
     return _box_tet(n, n, n)
 
 
+def box_hex(nx: int, ny: int, nz: int, lx: float = 1.0, ly: float = 1.0,
+            lz: float = 1.0) -> Mesh:
+    """Structured trilinear hexahedral box mesh (Q1_hex cells, corner order
+    matching :data:`repro.core.elements._HEX_CORNERS`)."""
+    xs = np.linspace(0, lx, nx + 1)
+    ys = np.linspace(0, ly, ny + 1)
+    zs = np.linspace(0, lz, nz + 1)
+    X, Y, Z = np.meshgrid(xs, ys, zs, indexing="ij")
+    pts = np.stack([X.ravel(), Y.ravel(), Z.ravel()], axis=-1)
+
+    def vid(i, j, k):
+        return (i * (ny + 1) + j) * (nz + 1) + k
+
+    cells = []
+    for i in range(nx):
+        for j in range(ny):
+            for k in range(nz):
+                cells.append(
+                    [
+                        vid(i, j, k), vid(i + 1, j, k),
+                        vid(i + 1, j + 1, k), vid(i, j + 1, k),
+                        vid(i, j, k + 1), vid(i + 1, j, k + 1),
+                        vid(i + 1, j + 1, k + 1), vid(i, j + 1, k + 1),
+                    ]
+                )
+    return Mesh(pts, np.array(cells), "hex")
+
+
+def unit_cube_hex(n: int) -> Mesh:
+    return box_hex(n, n, n)
+
+
 def hollow_cube_tet(n: int) -> Mesh:
     """[0,1]^3 minus the open box (0.25, 0.75)^3 (paper SM B.1.1)."""
     lo = int(round(0.25 * n))
@@ -363,4 +414,6 @@ def element_for_mesh(mesh: Mesh, degree: int = 1) -> ReferenceElement:
         return get_element("P1_tet")
     if mesh.cell_type == "quad":
         return get_element("Q1_quad")
+    if mesh.cell_type == "hex":
+        return get_element("Q1_hex")
     raise ValueError(mesh.cell_type)

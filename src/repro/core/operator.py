@@ -1,0 +1,410 @@
+"""Matrix-free Galerkin operators: ``y = A(form) @ x`` without CSR values.
+
+The assembled path materializes the global value vector (one float per nnz,
+plus pattern arrays and optional ELL mirrors) before the Krylov loop ever
+runs.  This module applies the operator **directly from the weak form**:
+
+    gather   x_e = x[cell_dofs]                 (element-local Map input)
+    apply    y_e = K_e(form) x_e                (per-element dense action)
+    scatter  y   = S_vec · vec(y_e)             (the Sparse-Reduce, but onto
+                                                 a vector — num_dofs segments
+                                                 instead of nnz)
+
+For the built-in kernels the per-element action is *fused*: diffusion applies
+``𝒢ᵀ(w ρ (𝒢 x_e))`` through (E, Q, d) intermediates and never forms the
+(E, k, k) element matrices — the same message-passing-on-the-sparsity-graph
+structure that graph-Galerkin networks exploit matrix-free.  Unknown kernels
+fall back to forming K_e on the fly (still no *global* values).
+
+Storage strategies (the memory/speed dial):
+
+=========  =====================================  ===========================
+store      per-apply state beyond the plan        geometry work per apply
+=========  =====================================  ===========================
+"coords"   coefficient leaves only                full Stage-I recompute
+"context"  the Stage-I FormContext (E·Q·k·d)      none (precomputed)
+"local"    the element matrices (E·k²)            none (K_e precomputed)
+=========  =====================================  ===========================
+
+``"coords"`` shares the plan's coordinate array, so the operator adds
+essentially no storage — DoF counts whose CSR values no longer fit stay
+reachable.  ``"local"`` is the classical element-by-element (EbE) scheme.
+
+Everything is a pytree: coefficient values and geometry are traced leaves,
+the form signature and plan tables are identity-hashed aux data — so a
+re-built operator with new coefficient *values* reuses the jitted apply
+executable (zero retraces), and ``jvp``/``vjp`` flow through the apply like
+any other jnp program.  :func:`repro.core.solvers.matfree_solve` adds the
+O(1)-graph adjoint solve on top (grad through a matrix-free solve matches
+the assembled ``sparse_solve`` path).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import forms, weakform
+from .assembly import AssemblyPlan, PlanStatic, geometry_context, reduce_vector
+from .sparse import _dev
+
+__all__ = [
+    "LinearOperator",
+    "MatFreeOperator",
+    "matfree_operator",
+    "n_matfree_traces",
+]
+
+_N_MF_TRACES = [0]
+
+
+def n_matfree_traces() -> int:
+    """Trace counter of the jitted matrix-free applies — re-applying with new
+    coefficient/geometry *values* must not grow it (zero-retrace property)."""
+    return _N_MF_TRACES[0]
+
+
+class LinearOperator:
+    """Minimal abstract interface the solver stack dispatches on.
+
+    Anything exposing ``matvec`` / ``rmatvec`` / ``diagonal`` / ``shape`` can
+    drive :func:`~repro.core.solvers.cg`,
+    :func:`~repro.core.solvers.bicgstab`,
+    :func:`~repro.core.solvers.jacobi_preconditioner` and
+    :func:`~repro.core.solvers.matfree_solve`.  :class:`~repro.core.CSR`
+    satisfies the protocol structurally; :class:`MatFreeOperator` is the
+    matrix-free implementation.
+    """
+
+    shape: tuple[int, int]
+
+    def matvec(self, x):  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def rmatvec(self, x):  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def diagonal(self):  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def __matmul__(self, x):
+        return self.matvec(x)
+
+
+# ---------------------------------------------------------------------------
+# Fused per-element actions: y_e = K_e x_e through (E, Q, ...) intermediates,
+# never materializing the (E, k, k) element matrices.  One (action, transpose
+# action, diagonal) triple per weak-form kernel; kernels without an entry
+# fall back to forming K_e (still matrix-free at the global level).
+# ---------------------------------------------------------------------------
+
+def _diffusion_act(ctx, vs, xe, rho=None):
+    rho_q = forms.eval_coefficient(rho, ctx)
+    gu = jnp.einsum("eqai,ea->eqi", ctx.grad, xe)
+    return jnp.einsum("eqai,eqi->ea", ctx.grad, (ctx.wdet * rho_q)[..., None] * gu)
+
+
+def _diffusion_diag(ctx, vs, rho=None):
+    rho_q = forms.eval_coefficient(rho, ctx)
+    return jnp.einsum("eq,eq,eqai,eqai->ea", ctx.wdet, rho_q, ctx.grad, ctx.grad)
+
+
+def _mass_act(ctx, vs, xe, c=None):
+    c_q = forms.eval_coefficient(c, ctx)
+    uq = jnp.einsum("qa,ea->eq", ctx.phi, xe)
+    return jnp.einsum("eq,qa->ea", ctx.wdet * c_q * uq, ctx.phi)
+
+
+def _mass_diag(ctx, vs, c=None):
+    c_q = forms.eval_coefficient(c, ctx)
+    return jnp.einsum("eq,qa,qa->ea", ctx.wdet * c_q, ctx.phi, ctx.phi)
+
+
+def _advection_act(ctx, vs, xe, beta):
+    d = ctx.grad.shape[-1]
+    b_q = forms.eval_coefficient(beta, ctx, vector_size=d)
+    gu = jnp.einsum("eqbi,eb->eqi", ctx.grad, xe)
+    s = jnp.einsum("eqi,eqi->eq", b_q, gu)
+    return jnp.einsum("eq,qa->ea", ctx.wdet * s, ctx.phi)
+
+
+def _advection_act_t(ctx, vs, xe, beta):
+    # Kᵀ: y_b = Σ_q ŵ|detJ| (β·𝒢_b) u_q with u_q the interpolated input
+    d = ctx.grad.shape[-1]
+    b_q = forms.eval_coefficient(beta, ctx, vector_size=d)
+    uq = jnp.einsum("qa,ea->eq", ctx.phi, xe)
+    return jnp.einsum("eq,eqi,eqbi->eb", ctx.wdet * uq, b_q, ctx.grad)
+
+
+def _advection_diag(ctx, vs, beta):
+    d = ctx.grad.shape[-1]
+    b_q = forms.eval_coefficient(beta, ctx, vector_size=d)
+    return jnp.einsum("eq,qa,eqi,eqai->ea", ctx.wdet, ctx.phi, b_q, ctx.grad)
+
+
+def _aniso_act(ctx, vs, xe, a=None):
+    d = ctx.grad.shape[-1]
+    a_q = forms.eval_tensor_coefficient(a, ctx, d)
+    gu = jnp.einsum("eqbj,eb->eqj", ctx.grad, xe)
+    z = jnp.einsum("eqij,eqj->eqi", a_q, gu)
+    return jnp.einsum("eq,eqai,eqi->ea", ctx.wdet, ctx.grad, z)
+
+
+def _aniso_act_t(ctx, vs, xe, a=None):
+    d = ctx.grad.shape[-1]
+    a_q = jnp.swapaxes(forms.eval_tensor_coefficient(a, ctx, d), -1, -2)
+    gu = jnp.einsum("eqbj,eb->eqj", ctx.grad, xe)
+    z = jnp.einsum("eqij,eqj->eqi", a_q, gu)
+    return jnp.einsum("eq,eqai,eqi->ea", ctx.wdet, ctx.grad, z)
+
+
+def _aniso_diag(ctx, vs, a=None):
+    d = ctx.grad.shape[-1]
+    a_q = forms.eval_tensor_coefficient(a, ctx, d)
+    return jnp.einsum("eq,eqai,eqij,eqaj->ea", ctx.wdet, ctx.grad, a_q, ctx.grad)
+
+
+# kind -> (action, transpose action, diagonal); None → generic K_e fallback
+_ACTIONS: dict[str, tuple] = {
+    "diffusion": (_diffusion_act, _diffusion_act, _diffusion_diag),
+    "mass": (_mass_act, _mass_act, _mass_diag),
+    "advection": (_advection_act, _advection_act_t, _advection_diag),
+    "anisotropic_diffusion": (_aniso_act, _aniso_act_t, _aniso_diag),
+}
+
+
+def _generic_act(kind, ctx, vs, xe, *coeffs, transpose=False):
+    k_local = weakform.KERNELS[kind].fn(ctx, vs, *coeffs)
+    sub = "eab,ea->eb" if transpose else "eab,eb->ea"
+    return jnp.einsum(sub, k_local, xe)
+
+
+def _generic_diag(kind, ctx, vs, *coeffs):
+    k_local = weakform.KERNELS[kind].fn(ctx, vs, *coeffs)
+    return jnp.einsum("eaa->ea", k_local)
+
+
+# ---------------------------------------------------------------------------
+# The operator
+# ---------------------------------------------------------------------------
+
+_STORES = ("coords", "context", "local")
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True, eq=False)
+class MatFreeOperator(LinearOperator):
+    """``y = A(form) @ x`` straight from an :class:`AssemblyPlan` + lowered
+    :class:`~repro.core.weakform.WeakForm` — build with
+    :func:`matfree_operator`.
+
+    Pytree layout: geometry (``coords`` | ``ctx`` | ``k_local``, per the
+    storage strategy), coefficient ``leaves`` and the Dirichlet ``free_mask``
+    are traced children; the plan tables, form signature and store tag are
+    identity-hashed aux — so jit keys on the *signature* and re-applies with
+    new values hit the compiled executable.
+    """
+
+    coords: jnp.ndarray | None      # (E, nv_geo, d)   store="coords"
+    ctx: forms.FormContext | None   # Stage-I tensors  store="context"
+    k_local: jnp.ndarray | None     # (E, k, k)        store="local"
+    leaves: tuple                   # traced coefficient/scale leaves
+    free_mask: jnp.ndarray | None   # (n,) 1=free, 0=Dirichlet (condensed)
+    static: PlanStatic              # aux: plan tables
+    spec: tuple                     # aux: lowered form signature
+    store: str                      # aux: storage strategy tag
+
+    # -- pytree ----------------------------------------------------------
+    def tree_flatten(self):
+        return (
+            (self.coords, self.ctx, self.k_local, self.leaves, self.free_mask),
+            (self.static, self.spec, self.store),
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    # -- shape / dtype ----------------------------------------------------
+    @property
+    def shape(self) -> tuple[int, int]:
+        return (self.static.num_dofs, self.static.num_dofs)
+
+    def condensed(self, bc) -> "MatFreeOperator":
+        """Dirichlet condensation as an operator wrapper: rows/columns of
+        constrained DoFs are masked and a unit diagonal inserted —
+        ``y = m·A(m·x) + (1−m)·x`` — matching
+        :meth:`~repro.core.boundary.DirichletCondenser.apply_matrix_only`
+        on the assembled matrix exactly."""
+        return dataclasses.replace(self, free_mask=bc.free_mask)
+
+    # -- the apply --------------------------------------------------------
+    def _context(self) -> forms.FormContext:
+        if self.ctx is not None:
+            return self.ctx
+        st = self.static
+        return geometry_context(
+            self.coords, st.geo_phi, st.geo_grad, st.phi, st.gradhat, st.w,
+            scalar_cell_dofs=st.scalar_cell_dofs,
+        )
+
+    def _term_values(self):
+        leaf = iter(self.leaves)
+        for kind, domain, desc in self.spec:
+            vals = [next(leaf) if d == weakform.TRACED else d[1] for d in desc]
+            *coeffs, scale = vals
+            yield kind, coeffs, scale
+
+    def _local_apply(self, xe, transpose: bool):
+        if self.k_local is not None:
+            sub = "eab,ea->eb" if transpose else "eab,eb->ea"
+            return jnp.einsum(sub, self.k_local, xe)
+        ctx, vs = self._context(), self.static.value_size
+        out = None
+        for kind, coeffs, scale in self._term_values():
+            entry = _ACTIONS.get(kind)
+            if entry is not None:
+                act = entry[1] if transpose else entry[0]
+                y = act(ctx, vs, xe, *coeffs)
+            else:
+                y = _generic_act(kind, ctx, vs, xe, *coeffs, transpose=transpose)
+            y = y * jnp.asarray(scale)
+            out = y if out is None else out + y
+        return out
+
+    def _apply_impl(self, x, transpose: bool):
+        _N_MF_TRACES[0] += 1
+        st = self.static
+        if self.free_mask is not None:
+            m = self.free_mask.astype(x.dtype)
+            x_in = m * x
+        else:
+            x_in = x
+        xe = x_in[_dev(st.cell_dofs)]                    # gather (E, k)
+        y_local = self._local_apply(xe, transpose)       # per-element apply
+        y = reduce_vector(y_local, st.vec_routing, st.reduce_mode)  # scatter
+        if self.free_mask is not None:
+            y = m * y + (1.0 - m) * x
+        return y
+
+    def matvec(self, x: jnp.ndarray) -> jnp.ndarray:
+        """y = A x — jitted, cached per (plan, form signature, store)."""
+        return _apply_jit(self, x, False)
+
+    def rmatvec(self, x: jnp.ndarray) -> jnp.ndarray:
+        """y = Aᵀ x.  Galerkin row and column DoF maps coincide, so the
+        global transpose is the same gather → apply → scatter pipeline with
+        the *per-element* apply transposed (kernels declared ``symmetric``
+        in :data:`repro.core.weakform.KERNELS` reuse the forward action)."""
+        if self.k_local is None and all(
+            weakform.KERNELS[kind].symmetric for kind, _, _ in self.spec
+        ):
+            return _apply_jit(self, x, False)
+        return _apply_jit(self, x, True)
+
+    def diagonal(self) -> jnp.ndarray:
+        """diag(A) by a diagonal-only assembly: per-element diagonals reduce
+        through the vector routing — O(E·k) work and memory, no nnz vector —
+        feeding :func:`~repro.core.solvers.jacobi_preconditioner`."""
+        return _diag_jit(self)
+
+    def _diag_impl(self):
+        st = self.static
+        if self.k_local is not None:
+            d_local = jnp.einsum("eaa->ea", self.k_local)
+        else:
+            ctx, vs = self._context(), st.value_size
+            d_local = None
+            for kind, coeffs, scale in self._term_values():
+                entry = _ACTIONS.get(kind)
+                d = (
+                    entry[2](ctx, vs, *coeffs)
+                    if entry is not None
+                    else _generic_diag(kind, ctx, vs, *coeffs)
+                )
+                d = d * jnp.asarray(scale)
+                d_local = d if d_local is None else d_local + d
+        diag = reduce_vector(d_local, st.vec_routing, st.reduce_mode)
+        if self.free_mask is not None:
+            m = self.free_mask.astype(diag.dtype)
+            diag = m * diag + (1.0 - m)
+        return diag
+
+    # -- introspection ----------------------------------------------------
+    def state_bytes(self) -> int:
+        """Bytes of traced state this operator carries *beyond* the plan —
+        the matrix-free side of the memory trade-off table (a ``"coords"``
+        operator shares the plan's coordinates: ~coefficients only)."""
+        leaves = [self.k_local, self.free_mask, *self.leaves]
+        if self.store == "context":
+            leaves += list(jax.tree_util.tree_leaves(self.ctx))
+        return sum(
+            v.nbytes for v in leaves
+            if v is not None and hasattr(v, "nbytes")
+        )
+
+
+@partial(jax.jit, static_argnums=(2,))
+def _apply_jit(op: MatFreeOperator, x, transpose: bool):
+    return op._apply_impl(x, transpose)
+
+
+@jax.jit
+def _diag_jit(op: MatFreeOperator):
+    return op._diag_impl()
+
+
+def matfree_operator(plan: AssemblyPlan, form, store: str = "context",
+                     coords=None) -> MatFreeOperator:
+    """Build the matrix-free operator of a bilinear form on a plan.
+
+    ``store`` picks the memory/speed point (see module docstring):
+    ``"context"`` (default) precomputes the Stage-I geometry once for the
+    fastest apply; ``"coords"`` recomputes it per apply and stores nothing
+    beyond the plan's coordinates; ``"local"`` precomputes the (E, k, k)
+    element matrices (classical EbE).  All three are differentiable w.r.t.
+    coefficients and coordinates and share the assembled operator's values
+    to machine precision: ``op.matvec(x) == assemble(plan, form).matvec(x)``.
+    """
+    if store not in _STORES:
+        raise ValueError(f"unknown store {store!r}; use one of {_STORES}")
+    spec, leaves = weakform.lower(form, weakform.MATRIX)
+    if any(domain is not None for _, domain, _ in spec):
+        raise NotImplementedError(
+            "matrix-free apply supports volume terms only: assemble facet "
+            "terms into a CSR and combine, or condense them into the RHS"
+        )
+    st = plan.static
+    if st.cell_dofs is None:
+        raise ValueError(
+            "plan.static.cell_dofs is missing — rebuild the plan with "
+            "repro.core.build_plan (older pickled plans predate the "
+            "matrix-free subsystem)"
+        )
+    c = plan.coords if coords is None else coords
+    op = MatFreeOperator(
+        coords=c, ctx=None, k_local=None, leaves=leaves, free_mask=None,
+        static=st, spec=spec, store=store,
+    )
+    if store == "context":
+        op = dataclasses.replace(
+            op, ctx=geometry_context(
+                c, st.geo_phi, st.geo_grad, st.phi, st.gradhat, st.w,
+                scalar_cell_dofs=st.scalar_cell_dofs,
+            ), coords=None,
+        )
+    elif store == "local":
+        ctx = op._context()
+        k_local = None
+        for kind, coeffs, scale in op._term_values():
+            k = weakform.KERNELS[kind].fn(ctx, st.value_size, *coeffs)
+            k = k * jnp.asarray(scale)
+            k_local = k if k_local is None else k_local + k
+        op = dataclasses.replace(
+            op, k_local=k_local, coords=None, leaves=(),
+            spec=tuple((kind, None, ()) for kind, _, _ in spec),
+        )
+    return op

@@ -8,6 +8,17 @@
   cotangent ``∂/∂vals = −λ[rows]·U[cols]`` (only at stored nnz positions) and
   ``∂/∂F = λ``.  This is the TORCH-SLA trick: O(1) extra graph nodes per
   optimization iteration instead of O(iters × DoFs) from unrolling.
+* :func:`matfree_solve` — the same adjoint structure for ANY pytree linear
+  operator (notably :class:`repro.core.operator.MatFreeOperator`): the
+  backward pass solves ``Aᵀλ = ḡ`` via ``rmatvec`` and obtains the operator
+  cotangent as the vjp of ``θ ↦ A(θ)·x`` at ``−λ`` — so ``grad`` through a
+  matrix-free solve matches the assembled adjoint path without ever
+  materializing values.
+
+``cg`` / ``bicgstab`` accept either a matvec callable or any object with a
+``.matvec`` method (CSR, MatFreeOperator); :func:`jacobi_preconditioner`
+needs only ``.diagonal()`` — for matrix-free operators that is a cheap
+diagonal-only assembly.
 """
 
 from __future__ import annotations
@@ -26,6 +37,7 @@ __all__ = [
     "jacobi_preconditioner",
     "sparse_solve",
     "sparse_solve_batched",
+    "matfree_solve",
     "SolveInfo",
 ]
 
@@ -35,7 +47,10 @@ class SolveInfo(NamedTuple):
     residual: jnp.ndarray
 
 
-def jacobi_preconditioner(a: CSR) -> Callable:
+def jacobi_preconditioner(a) -> Callable:
+    """Diagonal (Jacobi) preconditioner from anything with ``.diagonal()`` —
+    an assembled :class:`CSR` or a matrix-free operator (diagonal-only
+    assembly, no nnz vector)."""
     d = a.diagonal()
     inv = jnp.where(jnp.abs(d) > 0, 1.0 / d, 1.0)
     return lambda x: inv * x
@@ -45,11 +60,18 @@ def _identity(x):
     return x
 
 
+def _as_matvec(a) -> Callable:
+    """Normalize an operator argument: a callable is used as-is, anything
+    else must expose ``.matvec`` (CSR, MatFreeOperator, ELL)."""
+    return a if callable(a) else a.matvec
+
+
 # ---------------------------------------------------------------------------
 # Conjugate gradients (SPD systems: Poisson, elasticity)
 # ---------------------------------------------------------------------------
 
 def cg(matvec, b, x0=None, *, tol=1e-10, atol=1e-10, maxiter=10000, m=_identity):
+    matvec = _as_matvec(matvec)
     x0 = jnp.zeros_like(b) if x0 is None else x0
     bnorm = jnp.linalg.norm(b)
     target = jnp.maximum(tol * bnorm, atol)
@@ -83,6 +105,7 @@ def cg(matvec, b, x0=None, *, tol=1e-10, atol=1e-10, maxiter=10000, m=_identity)
 # ---------------------------------------------------------------------------
 
 def bicgstab(matvec, b, x0=None, *, tol=1e-10, atol=1e-10, maxiter=10000, m=_identity):
+    matvec = _as_matvec(matvec)
     x0 = jnp.zeros_like(b) if x0 is None else x0
     bnorm = jnp.linalg.norm(b)
     target = jnp.maximum(tol * bnorm, atol)
@@ -161,6 +184,51 @@ def _solve_bwd(method, tol, atol, maxiter, precond, res, g):
 
 
 sparse_solve.defvjp(_solve_fwd, _solve_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable matrix-free solve: the adjoint trick for pytree operators
+# ---------------------------------------------------------------------------
+
+def _op_solve_impl(op, b, method, tol, atol, maxiter, precond, transpose=False):
+    matvec = op.rmatvec if transpose else op.matvec
+    m = jacobi_preconditioner(op) if precond == "jacobi" else _identity
+    x, _ = _METHODS[method](matvec, b, tol=tol, atol=atol, maxiter=maxiter, m=m)
+    return x
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6))
+def matfree_solve(op, b, method="cg", tol=1e-10, atol=1e-10,
+                  maxiter=10000, precond="jacobi"):
+    """``x = A⁻¹ b`` for any pytree linear operator with ``matvec`` /
+    ``rmatvec`` / ``diagonal`` — differentiable w.r.t. the operator's traced
+    leaves (coefficients, geometry) *and* ``b`` via the adjoint solve.
+
+    The backward pass solves ``Aᵀλ = ḡ`` with the same Krylov method, then
+    recovers the operator cotangent as ``vjp(θ ↦ A(θ)·x)(−λ)`` — for a
+    :class:`~repro.core.operator.MatFreeOperator` that is one extra
+    matrix-free apply-transpose, never an assembled matrix.  (A :class:`CSR`
+    works too and reproduces :func:`sparse_solve`'s sparse cotangent.)
+    """
+    return _op_solve_impl(op, b, method, tol, atol, maxiter, precond)
+
+
+def _matfree_fwd(op, b, method, tol, atol, maxiter, precond):
+    x = _op_solve_impl(op, b, method, tol, atol, maxiter, precond)
+    return x, (op, x)
+
+
+def _matfree_bwd(method, tol, atol, maxiter, precond, res, g):
+    op, x = res
+    lam = _op_solve_impl(op, g, method, tol, atol, maxiter, precond,
+                         transpose=True)
+    # ∂L/∂θ = −λᵀ (∂A/∂θ) x — the vjp of the apply w.r.t. the operator pytree
+    _, pullback = jax.vjp(lambda o: o.matvec(x), op)
+    (d_op,) = pullback(-lam)
+    return (d_op, lam)
+
+
+matfree_solve.defvjp(_matfree_fwd, _matfree_bwd)
 
 
 def sparse_solve_batched(a: BatchedCSR, b, method="bicgstab", tol=1e-10,

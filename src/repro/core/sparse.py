@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["CSR", "ELL", "BatchedCSR", "csr_to_ell"]
+__all__ = ["CSR", "ELL", "BatchedCSR", "csr_to_ell", "ell_layout"]
 
 
 # device mirrors of static numpy pattern arrays, keyed by id: staged to the
@@ -45,9 +45,10 @@ def _dev(x) -> jnp.ndarray:
 
 
 def clear_device_mirrors():
-    """Release every cached (host, device) pattern-array pair — part of the
-    ``repro.core.clear_assembly_caches`` memory-release path."""
+    """Release every cached (host, device) pattern-array pair and ELL layout
+    — part of the ``repro.core.clear_assembly_caches`` memory-release path."""
     _DEVICE_MIRRORS.clear()
+    _ELL_LAYOUTS.clear()
 
 
 @jax.tree_util.register_pytree_node_class
@@ -256,7 +257,22 @@ class ELL:
         return jnp.sum(self.vals * x[_dev(self.cols)], axis=1)
 
 
-def csr_to_ell(csr: CSR) -> ELL:
+# static ELL layouts keyed by pattern identity: the padded column table and
+# nnz→slot map depend only on (indptr, indices), so deriving them per call
+# (as the old per-call-site conversions did) redid an O(nnz) numpy sort-free
+# pass on every solve.  Strong references to the key arrays keep ids stable;
+# FIFO-bounded like the device mirrors.
+_ELL_LAYOUTS: dict[int, tuple] = {}
+_ELL_LAYOUTS_LIMIT = 128
+
+
+def ell_layout(csr: CSR) -> tuple[np.ndarray, np.ndarray, int]:
+    """Static ELL layout of a CSR pattern: ``(cols, flat_pos, L)`` — cached
+    per pattern identity so repeated conversions only pay the runtime value
+    scatter."""
+    hit = _ELL_LAYOUTS.get(id(csr.indices))
+    if hit is not None:
+        return hit[1]
     n = csr.shape[0]
     counts = np.diff(csr.indptr)
     L = int(counts.max()) if counts.size else 1
@@ -264,8 +280,18 @@ def csr_to_ell(csr: CSR) -> ELL:
     slot = np.concatenate([np.arange(c) for c in counts]) if counts.size else np.array([], np.int64)
     rows_of = np.asarray(csr.row_of_nnz)
     cols[rows_of, slot] = np.asarray(csr.indices)
-
-    # runtime scatter of vals into the padded layout (static slot map)
     flat_pos = rows_of * L + slot
-    vals = jnp.zeros((n * L,), dtype=csr.vals.dtype).at[flat_pos].set(csr.vals)
+    layout = (cols, flat_pos, L)
+    if isinstance(csr.indices, np.ndarray):
+        while len(_ELL_LAYOUTS) >= _ELL_LAYOUTS_LIMIT:
+            _ELL_LAYOUTS.pop(next(iter(_ELL_LAYOUTS)))
+        _ELL_LAYOUTS[id(csr.indices)] = (csr.indices, layout)
+    return layout
+
+
+def csr_to_ell(csr: CSR) -> ELL:
+    cols, flat_pos, L = ell_layout(csr)
+    n = csr.shape[0]
+    # runtime scatter of vals into the padded layout (static slot map)
+    vals = jnp.zeros((n * L,), dtype=csr.vals.dtype).at[_dev(flat_pos)].set(csr.vals)
     return ELL(vals.reshape(n, L), cols, csr.shape)

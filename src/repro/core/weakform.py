@@ -62,10 +62,18 @@ TRACED = "traced"  # marker for a coefficient slot carried as a jit leaf
 
 @dataclasses.dataclass(frozen=True)
 class _Kernel:
-    """arity + the local Map: ``fn(ctx, value_size, *coeffs) -> (E,k,k)|(E,k)``."""
+    """arity + the local Map: ``fn(ctx, value_size, *coeffs) -> (E,k,k)|(E,k)``.
+
+    ``symmetric`` declares K_e = K_eᵀ for every admissible coefficient —
+    consumed by the matrix-free operator (:mod:`repro.core.operator`) to
+    reuse the forward action for ``rmatvec`` (a tensor-coefficient
+    anisotropic diffusion is symmetric only for symmetric A, so it is
+    conservatively marked nonsymmetric).
+    """
 
     arity: str
     fn: Callable
+    symmetric: bool = False
 
 
 def _source_kernel(ctx, vs, f):
@@ -73,14 +81,20 @@ def _source_kernel(ctx, vs, f):
 
 
 KERNELS: dict[str, _Kernel] = {
-    "diffusion": _Kernel(MATRIX, lambda ctx, vs, rho: forms.diffusion(ctx, rho)),
+    "diffusion": _Kernel(
+        MATRIX, lambda ctx, vs, rho: forms.diffusion(ctx, rho), symmetric=True
+    ),
     "anisotropic_diffusion": _Kernel(
         MATRIX, lambda ctx, vs, a: forms.anisotropic_diffusion(ctx, a)
     ),
     "advection": _Kernel(MATRIX, lambda ctx, vs, beta: forms.advection(ctx, beta)),
-    "mass": _Kernel(MATRIX, lambda ctx, vs, c: forms.mass(ctx, c)),
+    "mass": _Kernel(
+        MATRIX, lambda ctx, vs, c: forms.mass(ctx, c), symmetric=True
+    ),
     "elasticity": _Kernel(
-        MATRIX, lambda ctx, vs, lam, mu, scale: forms.elasticity(ctx, lam, mu, scale=scale)
+        MATRIX,
+        lambda ctx, vs, lam, mu, scale: forms.elasticity(ctx, lam, mu, scale=scale),
+        symmetric=True,
     ),
     "source": _Kernel(VECTOR, _source_kernel),
     "reaction": _Kernel(

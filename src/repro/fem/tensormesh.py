@@ -24,6 +24,8 @@ from ..core import (
     bicgstab,
     cg,
     jacobi_preconditioner,
+    make_matvec,
+    matfree_operator,
     weakform as wf,
 )
 from ..core import forms
@@ -47,6 +49,7 @@ class _SolveResult:
 class _ProblemBase:
     method = "cg"
     use_ell = True  # ELL matvec in the Krylov loop: 2.1× end-to-end (§Perf-FEM)
+    backend = None  # default matvec backend (None → "ell" per use_ell flag)
 
     @property
     def plan(self):
@@ -55,16 +58,41 @@ class _ProblemBase:
         ``assemble_batched`` / ``assemble_sharded`` entry points."""
         return self.asm.plan
 
-    def _solve_system(self, k, f, tol=1e-10, maxiter=10000):
-        solver = cg if self.method == "cg" else bicgstab
-        if self.use_ell:
-            from ..core import csr_to_ell
+    def _default_backend(self) -> str:
+        if self.backend is not None:
+            return self.backend
+        return "ell" if self.use_ell else "csr"
 
-            matvec = csr_to_ell(k).matvec
-        else:
-            matvec = k.matvec
+    def _solve_system(self, k, f, tol=1e-10, maxiter=10000, backend=None):
+        """Krylov solve on an assembled operator with the inner matvec from
+        the unified registry (:mod:`repro.core.matvec`)."""
+        solver = cg if self.method == "cg" else bicgstab
+        matvec = make_matvec(k, backend or self._default_backend())
         u, info = solver(matvec, f, m=jacobi_preconditioner(k), tol=tol, maxiter=maxiter)
         rel = float(jnp.linalg.norm(k.matvec(u) - f) / jnp.linalg.norm(f))
+        return _SolveResult(u, int(info.iters), rel)
+
+    def _solve_matfree(self, form, load, tol=1e-10, maxiter=10000,
+                       dirichlet_values=0.0):
+        """Matrix-free Krylov solve: the operator applies ``form`` straight
+        from the plan (element-local Map → per-element action →
+        scatter-Reduce), Jacobi from a diagonal-only assembly, Dirichlet
+        condensation as an apply wrapper (the RHS lift runs one matrix-free
+        apply of the uncondensed operator) — global CSR values are never
+        materialized.  (For a *differentiable* matrix-free solve use
+        :func:`repro.core.matfree_solve` on the same operator.)"""
+        op_full = matfree_operator(self.plan, form)
+        op = op_full.condensed(self.bc)
+        if isinstance(dirichlet_values, (int, float)) and dirichlet_values == 0.0:
+            # homogeneous: the lift reduces to masking — skip the dead
+            # matrix-free apply of the all-zero boundary field
+            f = self.bc.project_residual(load)
+        else:
+            f = self.bc.lift(op_full, load, dirichlet_values)
+        solver = cg if self.method == "cg" else bicgstab
+        u, info = solver(op.matvec, f, m=jacobi_preconditioner(op),
+                         tol=tol, maxiter=maxiter)
+        rel = float(jnp.linalg.norm(op.matvec(u) - f) / jnp.linalg.norm(f))
         return _SolveResult(u, int(info.iters), rel)
 
 
@@ -82,9 +110,14 @@ class PoissonProblem(_ProblemBase):
         load = self.asm.assemble_rhs(wf.source(f))
         return self.bc.apply(k, load)
 
-    def solve(self, rho=None, f=1.0, tol=1e-10):
+    def solve(self, rho=None, f=1.0, tol=1e-10, backend=None):
+        """Solve with a registry-selected matvec backend; ``"matfree"``
+        skips matrix assembly entirely (only the RHS vector is assembled)."""
+        if backend == "matfree":
+            load = self.asm.assemble_rhs(wf.source(f))
+            return self._solve_matfree(wf.diffusion(rho), load, tol)
         k, load = self.assemble(rho, f)
-        return self._solve_system(k, load, tol)
+        return self._solve_system(k, load, tol, backend=backend)
 
     # -- many-query batched data generation (SM B.1.4) ------------------------
     def solve_batch(self, f_batch: jnp.ndarray, rho=None, tol=1e-10, maxiter=2000):
@@ -145,9 +178,14 @@ class AdvectionDiffusionProblem(_ProblemBase):
         return self.bc.apply(k, load, dirichlet_values)
 
     def solve(self, eps=1.0, beta=(1.0, 0.0), f=1.0, dirichlet_values=0.0,
-              tol=1e-10):
+              tol=1e-10, backend=None):
+        if backend == "matfree":
+            form = wf.diffusion(eps) + wf.advection(jnp.asarray(beta))
+            load = self.asm.assemble_rhs(wf.source(f))
+            return self._solve_matfree(form, load, tol,
+                                       dirichlet_values=dirichlet_values)
         k, load = self.assemble(eps, beta, f, dirichlet_values)
-        return self._solve_system(k, load, tol)
+        return self._solve_system(k, load, tol, backend=backend)
 
 
 class ElasticityProblem(_ProblemBase):
@@ -171,9 +209,16 @@ class ElasticityProblem(_ProblemBase):
         f = self.asm.assemble_rhs(wf.source(bf))
         return self.bc.apply(k, f)
 
-    def solve(self, body_force=None, tol=1e-10):
+    def solve(self, body_force=None, tol=1e-10, backend=None):
+        if backend == "matfree":
+            d = self.mesh.dim
+            bf = jnp.ones(d) if body_force is None else jnp.asarray(body_force)
+            load = self.asm.assemble_rhs(wf.source(bf))
+            return self._solve_matfree(
+                wf.elasticity(self.lam, self.mu), load, tol
+            )
         k, f = self.assemble(body_force)
-        return self._solve_system(k, f, tol)
+        return self._solve_system(k, f, tol, backend=backend)
 
 
 class MixedBCPoisson(_ProblemBase):
@@ -220,7 +265,13 @@ class MixedBCPoisson(_ProblemBase):
         self._ctx_r = self._fa_r.context() if self._fa_r is not None else None
 
     def solve(self, f, g_neumann=None, robin_alpha=1.0, g_robin=None,
-              dirichlet_values=None, rho=None, tol=1e-10):
+              dirichlet_values=None, rho=None, tol=1e-10, backend=None):
+        if backend == "matfree":
+            raise NotImplementedError(
+                "MixedBCPoisson has Robin facet terms, which the matrix-free "
+                "apply does not support (volume terms only) — use an "
+                "assembled backend ('csr'/'ell'/'ell_pallas')"
+            )
         # mixed volume + boundary form → ONE CSR from one fused assembly
         # (Robin facet terms inject into the volume pattern), and one fused
         # RHS over volume source + Neumann/Robin boundary loads.  Callables
@@ -249,4 +300,4 @@ class MixedBCPoisson(_ProblemBase):
             d_dofs = self.bc.bc_dofs
             bvals = jnp.asarray(dirichlet_values(self.space.dof_points[d_dofs]))
         kc, fc = self.bc.apply(k, load, bvals)
-        return self._solve_system(kc, fc, tol)
+        return self._solve_system(kc, fc, tol, backend=backend)

@@ -25,16 +25,23 @@ def batch_map_stiffness(coords, rho, *, interpret: bool | None = None):
     return local_stiffness_p1(coords, rho, interpret=itp)
 
 
+def _cols_dev(cols):
+    # stage the static column table once per layout (the core's device-mirror
+    # cache), not per call — an (N, L) host→device transfer on every matvec
+    # of a solve loop otherwise dominates the kernel itself
+    from ..core.sparse import _dev
+
+    return _dev(cols)
+
+
 def ell_matvec(ell, x, *, interpret: bool | None = None):
     """SpMV on a :class:`repro.core.sparse.ELL` operator."""
     itp = _interpret_default() if interpret is None else interpret
-    import jax.numpy as jnp
 
-    return spmv_ell(ell.vals, jnp.asarray(ell.cols), x, interpret=itp)
+    return spmv_ell(ell.vals, _cols_dev(ell.cols), x, interpret=itp)
 
 
 def ell_residual(ell, u, f, *, interpret: bool | None = None):
     itp = _interpret_default() if interpret is None else interpret
-    import jax.numpy as jnp
 
-    return galerkin_residual_ell(ell.vals, jnp.asarray(ell.cols), u, f, interpret=itp)
+    return galerkin_residual_ell(ell.vals, _cols_dev(ell.cols), u, f, interpret=itp)

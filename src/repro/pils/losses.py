@@ -29,6 +29,8 @@ from ..core import (
     assemble_batched,
     assemble_rhs,
     assemble_rhs_batched,
+    make_residual,
+    matfree_operator,
     sparse_solve_batched,
     weakform as wf,
 )
@@ -121,18 +123,31 @@ class GalerkinResidualLoss:
 
     The network may predict U directly (``coeffs_from(params)``) or via a
     pointwise backbone evaluated at DoF coordinates.
+
+    ``backend`` picks the residual inner op from the unified registry
+    (:mod:`repro.core.matvec`): ``"csr"`` (default), ``"ell"``,
+    ``"ell_pallas"`` (the fused ``r = K·u − f`` Pallas kernel — one pass, no
+    extra HBM round-trip), or ``"matfree"`` (K is never assembled; the
+    residual applies the weak form element-locally).
     """
 
     def __init__(self, asm: GalerkinAssembler, bc: DirichletCondenser,
-                 rho=None, f=1.0):
-        k = asm.assemble(wf.diffusion(rho))
+                 rho=None, f=1.0, backend: str = "csr"):
         load = asm.assemble_rhs(wf.source(f))
-        self.k, self.f = bc.apply(k, load)
+        if backend == "matfree":
+            self.k = matfree_operator(asm.plan, wf.diffusion(rho)).condensed(bc)
+            # homogeneous lift: K·u_D ≡ 0, so condensation reduces to masking
+            self.f = bc.project_residual(load)
+        else:
+            k = asm.assemble(wf.diffusion(rho))
+            self.k, self.f = bc.apply(k, load)
+        self._residual = make_residual(self.k, backend)
+        self.backend = backend
         self.bc = bc
         self.dof_points = jnp.asarray(asm.space.dof_points)
 
     def residual(self, u: jnp.ndarray) -> jnp.ndarray:
-        return self.k.matvec(u) - self.f
+        return self._residual(u, self.f)
 
     def __call__(self, u: jnp.ndarray) -> jnp.ndarray:
         r = self.residual(u)

@@ -4,8 +4,9 @@ operators.
 Module map
 ----------
 * :mod:`~repro.transient.stepping` — shared rollout machinery:
-  checkpoint-segmented ``lax.scan``, same-pattern CSR combination,
-  matvec-backend dispatch (CSR / ELL / Pallas-ELL).
+  checkpoint-segmented ``lax.scan``, same-pattern CSR combination.  The
+  inner-matvec backend dispatch lives in the unified registry
+  :mod:`repro.core.matvec` (CSR / ELL / Pallas-ELL / matrix-free).
 * :mod:`~repro.transient.theta` — :class:`ThetaIntegrator`: the θ-method
   for parabolic problems (θ=1 backward Euler, θ=½ Crank–Nicolson), with
   per-step time-varying loads and Dirichlet data inside the scan.
@@ -38,9 +39,10 @@ from __future__ import annotations
 
 import jax
 
+from ..core.matvec import make_matvec  # unified registry (compat re-export)
 from .newmark import NewmarkIntegrator
 from .newton import NewtonKrylovIntegrator
-from .stepping import axpy_csr, make_matvec, segmented_scan
+from .stepping import axpy_csr, segmented_scan
 from .theta import BACKWARD_EULER, CRANK_NICOLSON, ThetaIntegrator
 
 __all__ = [

@@ -29,6 +29,7 @@ import dataclasses
 import jax.numpy as jnp
 
 from ..core.boundary import DirichletCondenser
+from ..core.matvec import make_matvec
 from ..core.solvers import sparse_solve
 from ..core.sparse import CSR
 from .stepping import axpy_csr, segmented_scan
@@ -47,11 +48,17 @@ class NewmarkIntegrator:
     solver: str = "cg"          # M + βΔt²K is SPD
     tol: float = 1e-10
     maxiter: int = 10000
+    # inner K·u matvec backend (unified registry, repro.core.matvec): the
+    # predictor RHS runs two stiffness applies per step — "ell"/"ell_pallas"
+    # switch them to the padded layout / Pallas kernel (the solve itself
+    # stays on the differentiable sparse_solve path)
+    backend: str = "csr"
 
     def __post_init__(self):
         self.lhs_full = axpy_csr(
             1.0, self.mass, self.beta * self.dt**2, self.stiff
         )
+        self._stiff_mv = make_matvec(self.stiff, self.backend)
         if self.bc is not None:
             self.lhs = self.bc.apply_matrix_only(self.lhs_full)
             self.mass_c = self.bc.apply_matrix_only(self.mass)
@@ -64,7 +71,7 @@ class NewmarkIntegrator:
 
     def initial_acceleration(self, u0, load0=None):
         """Consistent a₀ from M a₀ = F(0) − K u₀ (condensed)."""
-        r = -self.stiff.matvec(u0)
+        r = -self._stiff_mv(u0)
         if load0 is not None:
             r = r + load0
         return sparse_solve(
@@ -75,7 +82,7 @@ class NewmarkIntegrator:
         dt, beta, gamma = self.dt, self.beta, self.gamma
         u_star = u + dt * v + 0.5 * dt**2 * (1 - 2 * beta) * a
         v_star = v + dt * (1 - gamma) * a
-        rhs = -self.stiff.matvec(u_star)
+        rhs = -self._stiff_mv(u_star)
         if load is not None:
             rhs = rhs + load
         a_new = sparse_solve(

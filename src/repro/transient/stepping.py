@@ -7,25 +7,25 @@
 * :func:`axpy_csr` — combine two same-pattern CSR operators into a third
   (``α·A + β·B``) without touching the static pattern; this is how the
   θ-method / Newmark effective operators are formed once, outside the loop.
-* :func:`make_matvec` — backend dispatch for the inner matvec: ``"csr"``
-  (gather + sorted segment-sum; differentiable), ``"ell"`` (padded ELLPACK
-  gather, pure jnp), or ``"ell_pallas"`` (the Pallas SpMV kernel —
-  TPU fast path via :func:`repro.kernels.ell_matvec`).
+
+The inner-matvec backend dispatch that used to live here
+(``make_matvec`` / ``MATVEC_BACKENDS``) moved to the unified registry in
+:mod:`repro.core.matvec` — every solver, integrator and loss now consumes
+one dispatch point, and the ELL layout derivation is cached per sparsity
+pattern instead of re-derived per call site.  The old names still resolve
+from this module but emit a ``DeprecationWarning``.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+import warnings
 
 import jax
-import jax.numpy as jnp
 
-from ..core.sparse import CSR, ELL, csr_to_ell
+from ..core.sparse import CSR
 
 __all__ = ["segmented_scan", "axpy_csr", "make_matvec", "MATVEC_BACKENDS"]
-
-MATVEC_BACKENDS = ("csr", "ell", "ell_pallas")
 
 
 def segmented_scan(step, init, xs, length: int, checkpoint_every: int | None = None):
@@ -66,22 +66,16 @@ def axpy_csr(alpha, a: CSR, beta, b: CSR) -> CSR:
     return dataclasses.replace(a, vals=alpha * a.vals + beta * b.vals)
 
 
-def make_matvec(op: CSR, backend: str = "csr") -> Callable:
-    """Return ``x ↦ op @ x`` for the chosen inner-loop backend.
+def __getattr__(name):
+    # deprecated backend-dispatch names, forwarded to the unified registry
+    if name in ("make_matvec", "MATVEC_BACKENDS"):
+        from ..core import matvec as _registry
 
-    ``"csr"`` keeps the differentiable segment-sum path; ``"ell"`` /
-    ``"ell_pallas"`` convert once to the padded ELLPACK layout (the
-    bounded-valence FEM format) and run the gather either in pure jnp or
-    through the Pallas SpMV kernel.
-    """
-    if backend == "csr":
-        return op.matvec
-    if backend == "ell":
-        ell = csr_to_ell(op)
-        return ell.matvec
-    if backend == "ell_pallas":
-        from ..kernels import ell_matvec
-
-        ell = csr_to_ell(op)
-        return lambda x: ell_matvec(ell, x)
-    raise ValueError(f"unknown matvec backend {backend!r}; use {MATVEC_BACKENDS}")
+        warnings.warn(
+            f"repro.transient.stepping.{name} is deprecated; use "
+            f"repro.core.matvec.{name} (the unified matvec-backend registry)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return getattr(_registry, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -28,9 +28,10 @@ import dataclasses
 import jax.numpy as jnp
 
 from ..core.boundary import DirichletCondenser
-from ..core.solvers import cg, jacobi_preconditioner, sparse_solve
+from ..core.matvec import make_matvec
+from ..core.solvers import cg, jacobi_preconditioner, matfree_solve, sparse_solve
 from ..core.sparse import CSR
-from .stepping import axpy_csr, make_matvec, segmented_scan
+from .stepping import axpy_csr, segmented_scan
 
 __all__ = ["ThetaIntegrator", "BACKWARD_EULER", "CRANK_NICOLSON"]
 
@@ -48,10 +49,15 @@ class ThetaIntegrator:
     (``assemble(mass(c) + θΔt·form)``) sharing one jit signature; the
     static sparsity pattern is reused across traces.
 
-    ``backend="csr"`` (default) keeps the rollout differentiable via
-    ``sparse_solve``; ``"ell"`` / ``"ell_pallas"`` run the inner matvecs on
-    the ELLPACK layout with a plain CG loop — the fast inference path
-    (``lax.while_loop`` is forward-only).
+    ``backend`` selects the inner-loop apply from the unified registry
+    (:mod:`repro.core.matvec`): ``"csr"`` (default) keeps the rollout
+    differentiable via ``sparse_solve``; ``"ell"`` / ``"ell_pallas"`` run
+    the inner matvecs on the ELLPACK layout with a plain CG loop — the fast
+    inference path (``lax.while_loop`` is forward-only); ``"matfree"``
+    (build via :meth:`from_form` with ``backend="matfree"``) steps on
+    matrix-free operators through the differentiable
+    :func:`~repro.core.solvers.matfree_solve` — no CSR values are ever
+    materialized for the rollout.
     """
 
     mass: CSR | None
@@ -75,11 +81,13 @@ class ThetaIntegrator:
             self.rhs_op = axpy_csr(
                 1.0, self.mass, -(1.0 - self.theta) * self.dt, self.stiff
             )
-        self.lhs = (
-            self.bc.apply_matrix_only(self.lhs_full) if self.bc is not None
-            else self.lhs_full
-        )
-        if self.backend != "csr":
+        if self.bc is None:
+            self.lhs = self.lhs_full
+        elif isinstance(self.lhs_full, CSR):
+            self.lhs = self.bc.apply_matrix_only(self.lhs_full)
+        else:  # matrix-free operator: condensation as an apply wrapper
+            self.lhs = self.lhs_full.condensed(self.bc)
+        if self.backend not in ("csr", "matfree"):
             self._lhs_mv = make_matvec(self.lhs, self.backend)
             self._rhs_mv = make_matvec(self.rhs_op, self.backend)
             self._precond = jacobi_preconditioner(self.lhs)
@@ -98,6 +106,11 @@ class ThetaIntegrator:
         all subsequent ``dt``/coefficient updates.  Forms containing an
         advection term make the lhs nonsymmetric, so the solver defaults to
         BiCGStab for them (CG otherwise — pass ``solver=`` to override).
+
+        ``backend="matfree"`` builds both effective operators matrix-free
+        (:func:`repro.core.matfree_operator`) — no CSR values for either
+        operator, steps stay differentiable via
+        :func:`~repro.core.solvers.matfree_solve`.
         """
         from ..core import weakform as wf
 
@@ -105,8 +118,16 @@ class ThetaIntegrator:
         kw.setdefault(
             "solver", "bicgstab" if any(t.kind == "advection" for t in terms) else "cg"
         )
-        lhs = asm.assemble(wf.mass(mass_coeff) + (theta * dt) * form)
-        rhs = asm.assemble(wf.mass(mass_coeff) + (-(1.0 - theta) * dt) * form)
+        lhs_form = wf.mass(mass_coeff) + (theta * dt) * form
+        rhs_form = wf.mass(mass_coeff) + (-(1.0 - theta) * dt) * form
+        if kw.get("backend") == "matfree":
+            from ..core.operator import matfree_operator
+
+            lhs = matfree_operator(asm.plan, lhs_form)
+            rhs = matfree_operator(asm.plan, rhs_form)
+        else:
+            lhs = asm.assemble(lhs_form)
+            rhs = asm.assemble(rhs_form)
         return cls(None, None, dt, theta=theta, bc=bc,
                    lhs_full=lhs, rhs_op=rhs, **kw)
 
@@ -115,7 +136,7 @@ class ThetaIntegrator:
         """Advance uⁿ → uⁿ⁺¹.  ``load`` is the assembled Fⁿ⁺ᶿ (already the
         θ-weighted quadrature of F if time-varying); ``bc_values`` the
         Dirichlet data at tⁿ⁺¹ (scalar, (n_bc,), or full field)."""
-        if self.backend == "csr":
+        if self.backend in ("csr", "matfree"):
             b = self.rhs_op.matvec(u)
         else:
             b = self._rhs_mv(u)
@@ -132,6 +153,11 @@ class ThetaIntegrator:
             b = self.bc.lift(self.lhs_full, b, bc_values)
         if self.backend == "csr":
             return sparse_solve(
+                self.lhs, b, self.solver, self.tol, self.tol, self.maxiter
+            )
+        if self.backend == "matfree":
+            # differentiable adjoint solve on the matrix-free operator
+            return matfree_solve(
                 self.lhs, b, self.solver, self.tol, self.tol, self.maxiter
             )
         u_new, _ = cg(self._lhs_mv, b, x0=u, tol=self.tol, atol=self.tol,

@@ -1,0 +1,457 @@
+"""Matrix-free operator subsystem + unified matvec-backend registry.
+
+Covers the PR-4 acceptance criteria: apply parity vs the assembled CSR
+matvec (≤1e-12) across ALL element types, grad-vs-FD and grad-vs-adjoint
+through matrix-free solves, the zero-retrace property on coefficient value
+updates, the condensed (Dirichlet) apply, the registry dispatch incl. the
+fused Pallas residual, and the deprecation shims of the old
+``transient.stepping`` dispatch names.
+"""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    CSR,
+    DirichletCondenser,
+    FunctionSpace,
+    GalerkinAssembler,
+    MATVEC_BACKENDS,
+    assemble,
+    assemble_rhs,
+    build_plan,
+    make_matvec,
+    make_residual,
+    matfree_operator,
+    matfree_solve,
+    n_matfree_traces,
+    sparse_solve,
+    unit_cube_hex,
+    unit_cube_tet,
+    unit_square_tri,
+    weakform as wf,
+)
+from repro.core.mesh import element_for_mesh, rectangle_quad
+from repro.core.operator import _apply_jit  # noqa: F401 (retrace counter target)
+
+RNG = np.random.default_rng(0)
+
+
+def _space(mesh, degree=1, value_size=1):
+    return FunctionSpace(mesh, element_for_mesh(mesh, degree), value_size)
+
+
+CASES = {
+    "P1_tri": lambda: _space(unit_square_tri(6)),
+    "P2_tri": lambda: _space(unit_square_tri(4), degree=2),
+    "P1_tet": lambda: _space(unit_cube_tet(3)),
+    "Q1_quad": lambda: _space(rectangle_quad(5, 4, 1.0, 1.0)),
+    "Q1_hex": lambda: _space(unit_cube_hex(3)),
+}
+
+
+# ---------------------------------------------------------------------------
+# apply parity across element types and storage strategies
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("element", sorted(CASES))
+@pytest.mark.parametrize("store", ["coords", "context", "local"])
+def test_apply_parity_all_elements(element, store):
+    space = CASES[element]()
+    assert space.element.name == element
+    plan = build_plan(space)
+    rho = jnp.asarray(RNG.uniform(0.5, 2.0, space.mesh.num_cells))
+    form = wf.diffusion(rho) + 0.3 * wf.mass()
+    k = assemble(plan, form)
+    op = matfree_operator(plan, form, store=store)
+    x = jnp.asarray(RNG.standard_normal(space.num_dofs))
+    np.testing.assert_allclose(
+        np.asarray(op.matvec(x)), np.asarray(k.matvec(x)), atol=1e-12
+    )
+    np.testing.assert_allclose(
+        np.asarray(op.diagonal()), np.asarray(k.diagonal()), atol=1e-12
+    )
+
+
+def test_rmatvec_parity_nonsymmetric():
+    space = CASES["P1_tri"]()
+    plan = build_plan(space)
+    form = wf.diffusion() + wf.advection(jnp.array([1.0, 0.5]))
+    k = assemble(plan, form)
+    op = matfree_operator(plan, form)
+    x = jnp.asarray(RNG.standard_normal(space.num_dofs))
+    np.testing.assert_allclose(
+        np.asarray(op.rmatvec(x)), np.asarray(k.rmatvec(x)), atol=1e-12
+    )
+
+
+def test_anisotropic_action_parity():
+    space = CASES["P1_tri"]()
+    plan = build_plan(space)
+    a = jnp.array([[2.0, 0.5], [0.3, 1.0]])  # nonsymmetric tensor coeff
+    form = wf.anisotropic_diffusion(a)
+    k = assemble(plan, form)
+    op = matfree_operator(plan, form)
+    x = jnp.asarray(RNG.standard_normal(space.num_dofs))
+    np.testing.assert_allclose(
+        np.asarray(op.matvec(x)), np.asarray(k.matvec(x)), atol=1e-12
+    )
+    np.testing.assert_allclose(
+        np.asarray(op.rmatvec(x)), np.asarray(k.rmatvec(x)), atol=1e-12
+    )
+    np.testing.assert_allclose(
+        np.asarray(op.diagonal()), np.asarray(k.diagonal()), atol=1e-12
+    )
+
+
+def test_elasticity_vector_space_fallback():
+    # no fused action registered for elasticity → the generic K_e fallback,
+    # on an interleaved vector space
+    mesh = unit_square_tri(4)
+    space = _space(mesh, value_size=2)
+    plan = build_plan(space)
+    form = wf.elasticity(1.2, 0.7)
+    k = assemble(plan, form)
+    op = matfree_operator(plan, form)
+    x = jnp.asarray(RNG.standard_normal(space.num_dofs))
+    np.testing.assert_allclose(
+        np.asarray(op.matvec(x)), np.asarray(k.matvec(x)), atol=1e-12
+    )
+    np.testing.assert_allclose(
+        np.asarray(op.diagonal()), np.asarray(k.diagonal()), atol=1e-12
+    )
+
+
+def test_condensed_matches_condensed_csr():
+    space = CASES["P1_tri"]()
+    plan = build_plan(space)
+    bc = DirichletCondenser(plan.static.mat_routing, space.boundary_dofs())
+    form = wf.diffusion(2.0)
+    kc = bc.apply_matrix_only(assemble(plan, form))
+    opc = matfree_operator(plan, form).condensed(bc)
+    x = jnp.asarray(RNG.standard_normal(space.num_dofs))
+    np.testing.assert_allclose(
+        np.asarray(opc.matvec(x)), np.asarray(kc.matvec(x)), atol=1e-12
+    )
+    np.testing.assert_allclose(
+        np.asarray(opc.diagonal()), np.asarray(kc.diagonal()), atol=1e-12
+    )
+
+
+# ---------------------------------------------------------------------------
+# zero-retrace on coefficient value updates
+# ---------------------------------------------------------------------------
+
+def test_zero_retrace_on_coefficient_update():
+    space = CASES["P1_tri"]()
+    plan = build_plan(space)
+    rho = jnp.asarray(RNG.uniform(0.5, 2.0, space.mesh.num_cells))
+    x = jnp.asarray(RNG.standard_normal(space.num_dofs))
+    op = matfree_operator(plan, wf.diffusion(rho))
+    jax.block_until_ready(op.matvec(x))  # compile once
+    before = n_matfree_traces()
+    for scale in (2.0, 3.0, 4.0):
+        op2 = matfree_operator(plan, wf.diffusion(scale * rho))
+        jax.block_until_ready(op2.matvec(2.0 * x))
+    assert n_matfree_traces() == before, "coefficient value update retraced"
+
+
+# ---------------------------------------------------------------------------
+# differentiable matrix-free solve (the PR acceptance criterion)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def cube_problem():
+    mesh = unit_cube_tet(3)
+    space = _space(mesh)
+    plan = build_plan(space)
+    bc = DirichletCondenser(plan.static.mat_routing, space.boundary_dofs())
+    f = bc.project_residual(assemble_rhs(plan, wf.source(1.0)))
+    rho0 = jnp.asarray(RNG.uniform(0.5, 2.0, mesh.num_cells))
+    return plan, bc, f, rho0
+
+
+def _solve_mf(plan, bc, f, rho):
+    op = matfree_operator(plan, wf.diffusion(rho)).condensed(bc)
+    return matfree_solve(op, f, "cg", 1e-12, 1e-12, 10000)
+
+
+def _solve_csr(plan, bc, f, rho):
+    k = bc.apply_matrix_only(assemble(plan, wf.diffusion(rho)))
+    return sparse_solve(k, f, "cg", 1e-12, 1e-12, 10000)
+
+
+def test_matfree_solve_matches_assembled_3d(cube_problem):
+    plan, bc, f, rho0 = cube_problem
+    u_mf = _solve_mf(plan, bc, f, rho0)
+    u_csr = _solve_csr(plan, bc, f, rho0)
+    assert float(jnp.max(jnp.abs(u_mf - u_csr))) < 1e-8
+
+
+def test_grad_matches_adjoint_sparse_solve(cube_problem):
+    plan, bc, f, rho0 = cube_problem
+    g_mf = jax.grad(lambda r: jnp.sum(_solve_mf(plan, bc, f, r) ** 2))(rho0)
+    g_csr = jax.grad(lambda r: jnp.sum(_solve_csr(plan, bc, f, r) ** 2))(rho0)
+    np.testing.assert_allclose(np.asarray(g_mf), np.asarray(g_csr), atol=1e-6)
+
+
+def test_grad_vs_finite_differences(cube_problem):
+    plan, bc, f, rho0 = cube_problem
+    loss = lambda r: jnp.sum(_solve_mf(plan, bc, f, r) ** 2)  # noqa: E731
+    g = jax.grad(loss)(rho0)
+    eps = 1e-5
+    for i in (0, 11, 47):
+        e = jnp.zeros_like(rho0).at[i].set(1.0)
+        fd = (loss(rho0 + eps * e) - loss(rho0 - eps * e)) / (2 * eps)
+        assert abs(float(g[i]) - float(fd)) < 1e-6
+
+
+def test_grad_wrt_rhs_is_adjoint_solution(cube_problem):
+    plan, bc, f, rho0 = cube_problem
+    gb = jax.grad(
+        lambda b: jnp.sum(_solve_mf(plan, bc, b, rho0) ** 2)
+    )(f)
+    gb_csr = jax.grad(
+        lambda b: jnp.sum(_solve_csr(plan, bc, b, rho0) ** 2)
+    )(f)
+    np.testing.assert_allclose(np.asarray(gb), np.asarray(gb_csr), atol=1e-8)
+
+
+def test_poisson_problem_matfree_backend():
+    from repro.fem.tensormesh import PoissonProblem
+
+    prob = PoissonProblem(unit_cube_tet(3))
+    res_csr = prob.solve()
+    res_mf = prob.solve(backend="matfree")
+    assert float(jnp.max(jnp.abs(res_csr.u - res_mf.u))) < 1e-8
+    assert res_mf.residual < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# the unified backend registry
+# ---------------------------------------------------------------------------
+
+def _small_system():
+    space = CASES["P1_tri"]()
+    plan = build_plan(space)
+    k = assemble(plan, wf.diffusion(1.5))
+    x = jnp.asarray(RNG.standard_normal(space.num_dofs))
+    return plan, k, x
+
+
+def test_registry_backends_agree():
+    plan, k, x = _small_system()
+    assert set(MATVEC_BACKENDS) >= {"csr", "ell", "ell_pallas", "matfree"}
+    y_ref = np.asarray(k.matvec(x))
+    for backend in ("csr", "ell", "ell_pallas"):
+        mv = make_matvec(k, backend)
+        np.testing.assert_allclose(np.asarray(mv(x)), y_ref, atol=1e-12)
+    op = matfree_operator(plan, wf.diffusion(1.5))
+    np.testing.assert_allclose(
+        np.asarray(make_matvec(op, "matfree")(x)), y_ref, atol=1e-12
+    )
+
+
+def test_registry_residuals_agree():
+    plan, k, x = _small_system()
+    f = jnp.asarray(RNG.standard_normal(x.shape[0]))
+    r_ref = np.asarray(k.matvec(x) - f)
+    for backend in ("csr", "ell", "ell_pallas"):
+        r = make_residual(k, backend)(x, f)
+        np.testing.assert_allclose(np.asarray(r), r_ref, atol=1e-12)
+    op = matfree_operator(plan, wf.diffusion(1.5))
+    np.testing.assert_allclose(
+        np.asarray(make_residual(op, "matfree")(x, f)), r_ref, atol=1e-12
+    )
+
+
+def test_registry_errors():
+    plan, k, x = _small_system()
+    op = matfree_operator(plan, wf.diffusion(1.5))
+    with pytest.raises(ValueError, match="unknown matvec backend"):
+        make_matvec(k, "nope")
+    with pytest.raises(TypeError, match="matrix-free operator"):
+        make_matvec(k, "matfree")
+    with pytest.raises(TypeError, match="assembled CSR"):
+        make_matvec(op, "ell")
+
+
+def test_register_custom_backend():
+    from repro.core.matvec import _BACKENDS, matvec_backends, register_matvec_backend
+
+    _, k, x = _small_system()
+    register_matvec_backend(
+        "dense_test", lambda op: op.to_dense().__matmul__, overwrite=True
+    )
+    try:
+        np.testing.assert_allclose(
+            np.asarray(make_matvec(k, "dense_test")(x)),
+            np.asarray(k.matvec(x)), atol=1e-12,
+        )
+        # the live set sees the registration; the built-in constant does not
+        assert "dense_test" in matvec_backends()
+        assert "dense_test" not in MATVEC_BACKENDS
+        with pytest.raises(ValueError, match="already registered"):
+            register_matvec_backend("dense_test", lambda op: op.matvec)
+    finally:
+        _BACKENDS.pop("dense_test", None)
+
+
+def test_ell_layout_cached_per_pattern():
+    from repro.core.sparse import _ELL_LAYOUTS, csr_to_ell
+
+    _, k, x = _small_system()
+    ell1 = csr_to_ell(k)
+    assert id(k.indices) in _ELL_LAYOUTS
+    ell2 = csr_to_ell(k)
+    assert ell1.cols is ell2.cols  # layout derived once, not per call site
+
+
+# ---------------------------------------------------------------------------
+# consumers: losses, transient, deprecation shims
+# ---------------------------------------------------------------------------
+
+def test_galerkin_residual_loss_backends():
+    from repro.pils.losses import GalerkinResidualLoss
+
+    space = CASES["P1_tri"]()
+    asm = GalerkinAssembler(space)
+    bc = DirichletCondenser(asm, space.boundary_dofs())
+    u = jnp.asarray(RNG.standard_normal(space.num_dofs))
+    ref = float(GalerkinResidualLoss(asm, bc)(u))
+    for backend in ("ell", "ell_pallas", "matfree"):
+        val = float(GalerkinResidualLoss(asm, bc, backend=backend)(u))
+        assert abs(val - ref) < 1e-9 * max(1.0, abs(ref))
+
+
+def test_theta_matfree_rollout_matches_csr():
+    from repro.transient import ThetaIntegrator
+
+    space = CASES["P1_tri"]()
+    asm = GalerkinAssembler(space)
+    bc = DirichletCondenser(asm, space.boundary_dofs())
+    u0 = jnp.asarray(RNG.standard_normal(space.num_dofs)) * jnp.asarray(bc.free_mask)
+    mk = lambda be: ThetaIntegrator.from_form(  # noqa: E731
+        asm, wf.diffusion(1.0), 0.01, theta=0.5, bc=bc, backend=be
+    )
+    traj_csr = mk("csr").rollout(u0, 4)
+    traj_mf = mk("matfree").rollout(u0, 4)
+    np.testing.assert_allclose(
+        np.asarray(traj_mf), np.asarray(traj_csr), atol=1e-10
+    )
+    # grad through the matrix-free rollout matches the adjoint CSR path
+    def loss(kappa, backend):
+        integ = ThetaIntegrator.from_form(
+            asm, wf.diffusion(kappa), 0.01, theta=0.5, bc=bc, backend=backend
+        )
+        return jnp.sum(integ.rollout(u0, 3) ** 2)
+
+    g_csr = jax.grad(lambda c: loss(c, "csr"))(1.3)
+    g_mf = jax.grad(lambda c: loss(c, "matfree"))(1.3)
+    assert abs(float(g_csr) - float(g_mf)) < 1e-8 * max(1.0, abs(float(g_csr)))
+
+
+def test_newmark_backend_dispatch():
+    from repro.transient import NewmarkIntegrator
+
+    space = CASES["P1_tri"]()
+    asm = GalerkinAssembler(space)
+    bc = DirichletCondenser(asm, space.boundary_dofs())
+    mass = asm.assemble(wf.mass())
+    stiff = asm.assemble(wf.diffusion())
+    u0 = jnp.asarray(RNG.standard_normal(space.num_dofs)) * jnp.asarray(bc.free_mask)
+    t_csr = NewmarkIntegrator(mass, stiff, 0.01, bc=bc).rollout(u0, 3)
+    t_ell = NewmarkIntegrator(mass, stiff, 0.01, bc=bc, backend="ell").rollout(u0, 3)
+    np.testing.assert_allclose(np.asarray(t_ell), np.asarray(t_csr), atol=1e-10)
+
+
+def test_stepping_names_deprecated_but_working():
+    from repro.transient import stepping
+
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        backends = stepping.MATVEC_BACKENDS
+        mv_factory = stepping.make_matvec
+    assert {w.category for w in caught} == {DeprecationWarning}
+    assert "matfree" in backends
+    _, k, x = _small_system()
+    np.testing.assert_allclose(
+        np.asarray(mv_factory(k, "ell")(x)), np.asarray(k.matvec(x)), atol=1e-12
+    )
+    with pytest.raises(AttributeError):
+        stepping.not_a_name  # noqa: B018
+
+
+def test_matfree_rejects_facet_terms_and_vector_arity():
+    from repro.core.boundary import FacetAssembler
+
+    space = CASES["P1_tri"]()
+    plan = build_plan(space)
+    fa = FacetAssembler(space, space.mesh.boundary_facets(),
+                        volume_routing=plan.static.mat_routing)
+    with pytest.raises(NotImplementedError, match="volume terms only"):
+        matfree_operator(plan, wf.diffusion() + wf.robin(1.0, on=fa))
+    with pytest.raises(TypeError):
+        matfree_operator(plan, wf.source(1.0))
+
+
+def test_matfree_solve_on_csr_matches_sparse_solve():
+    # the generic adjoint solve also accepts an assembled CSR pytree
+    space = CASES["P1_tri"]()
+    plan = build_plan(space)
+    bc = DirichletCondenser(plan.static.mat_routing, space.boundary_dofs())
+    f = bc.project_residual(assemble_rhs(plan, wf.source(1.0)))
+    rho = jnp.asarray(RNG.uniform(0.5, 2.0, space.mesh.num_cells))
+
+    def solve_generic(r):
+        k = bc.apply_matrix_only(assemble(plan, wf.diffusion(r)))
+        return matfree_solve(k, f, "cg", 1e-12, 1e-12, 10000)
+
+    def solve_sparse(r):
+        k = bc.apply_matrix_only(assemble(plan, wf.diffusion(r)))
+        return sparse_solve(k, f, "cg", 1e-12, 1e-12, 10000)
+
+    np.testing.assert_allclose(
+        np.asarray(solve_generic(rho)), np.asarray(solve_sparse(rho)), atol=1e-10
+    )
+    g1 = jax.grad(lambda r: jnp.sum(solve_generic(r) ** 2))(rho)
+    g2 = jax.grad(lambda r: jnp.sum(solve_sparse(r) ** 2))(rho)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# the new hex mesh (satellite: Q1_hex end-to-end)
+# ---------------------------------------------------------------------------
+
+def test_hex_mesh_poisson_sanity():
+    mesh = unit_cube_hex(4)
+    assert mesh.cell_type == "hex"
+    # structured box: volumes sum to 1, boundary facet count = 6 n²
+    np.testing.assert_allclose(mesh.cell_volumes().sum(), 1.0, atol=1e-12)
+    assert mesh.boundary_facets().shape == (6 * 16, 4)
+    space = _space(mesh)
+    plan = build_plan(space)
+    bc = DirichletCondenser(plan.static.mat_routing, space.boundary_dofs())
+    k = bc.apply_matrix_only(assemble(plan, wf.diffusion()))
+    f = bc.project_residual(assemble_rhs(plan, wf.source(1.0)))
+    u = sparse_solve(k, f, "cg", 1e-12, 1e-12, 10000)
+    # interior solution of -Δu = 1 on the unit cube is positive, max ≈ 0.056
+    assert float(jnp.min(u)) >= 0.0
+    assert 0.03 < float(jnp.max(u)) < 0.09
+
+
+def test_matfree_state_is_small():
+    # the memory story: a coords-store operator carries only the coefficient
+    # leaves beyond the plan — far below the 3 nnz-sized CSR arrays
+    space = _space(unit_cube_tet(4))
+    plan = build_plan(space)
+    rho = jnp.asarray(RNG.uniform(0.5, 2.0, space.mesh.num_cells))
+    k = assemble(plan, wf.diffusion(rho))
+    op = matfree_operator(plan, wf.diffusion(rho), store="coords")
+    csr_bytes = k.vals.nbytes + k.indices.nbytes + k.row_of_nnz.nbytes
+    assert op.state_bytes() < csr_bytes / 2
+    assert isinstance(k, CSR)

@@ -93,9 +93,10 @@ def _solve_case(n: int):
 
     prob = PoissonProblem(unit_cube_tet(n))
     res_csr = prob.solve()
-    res_mf = prob.solve(backend="matfree")
+    res_mf, info_mf = prob.solve(backend="matfree", return_info=True)
     err = float(jnp.max(jnp.abs(res_csr.u - res_mf.u)))
     assert err < 1e-8, f"matrix-free solve deviates from assembled: {err}"
+    assert res_mf.converged, "matrix-free solve did not converge"
 
     t_csr = time_fn(lambda: prob.solve().u)
     t_mf = time_fn(lambda: prob.solve(backend="matfree").u)
@@ -103,7 +104,9 @@ def _solve_case(n: int):
         f"matfree_poisson_solve_tet{n}", t_mf,
         f"csr_us={t_csr:.1f};iters={res_mf.iters};err={err:.1e}",
         dofs=prob.space.num_dofs, csr_us=round(t_csr, 1),
-        iters=res_mf.iters, max_err_vs_csr=err,
+        iters=res_mf.iters, iterations=int(info_mf.iters),
+        final_residual=float(info_mf.residual),
+        converged=bool(info_mf.converged), max_err_vs_csr=err,
     )
 
 

@@ -9,17 +9,20 @@ import numpy as np
 from repro.core import hollow_cube_tet, unit_cube_tet
 from repro.fem import ElasticityProblem, PoissonProblem
 
-from .common import emit, time_fn
+from .common import emit, emit_json, time_fn
 
 
 def main():
     for n in (6, 10, 14):
         prob = PoissonProblem(unit_cube_tet(n))
-        res = prob.solve()  # warm compile
+        res, info = prob.solve(return_info=True)  # warm compile
         t = time_fn(lambda: prob.solve(tol=1e-10).u, warmup=0, iters=3)
-        emit(
+        emit_json(
             f"poisson3d_solve_n{prob.space.num_dofs}", t,
             f"dofs={prob.space.num_dofs};iters={res.iters};relres={res.residual:.1e}",
+            dofs=prob.space.num_dofs, iterations=int(info.iters),
+            final_residual=float(info.residual),
+            converged=bool(info.converged), relres=res.residual,
         )
         # scipy direct-solve baseline on the same system
         k, f = prob.assemble()
@@ -31,11 +34,14 @@ def main():
 
     for n in (4, 8):
         prob = ElasticityProblem(hollow_cube_tet(n))
-        res = prob.solve()
+        res, info = prob.solve(return_info=True)
         t = time_fn(lambda: prob.solve(tol=1e-10).u, warmup=0, iters=2)
-        emit(
+        emit_json(
             f"elasticity3d_solve_n{prob.space.num_dofs}", t,
             f"dofs={prob.space.num_dofs};iters={res.iters};relres={res.residual:.1e}",
+            dofs=prob.space.num_dofs, iterations=int(info.iters),
+            final_residual=float(info.residual),
+            converged=bool(info.converged), relres=res.residual,
         )
 
 

@@ -1,0 +1,96 @@
+"""CI telemetry smoke: one instrumented end-to-end solve, checked hard.
+
+Exercises the full observability path on a small 3D Poisson problem:
+
+1. ``telemetry.enable(jsonl=...)`` + ``telemetry.capture(trace_dir)`` around
+   an assembled-CSR solve and a matrix-free solve (named-phase annotations
+   land in the profiler trace),
+2. ``SolveInfo`` comes back through ``return_info=True`` with
+   ``converged=True``,
+3. ``export_jsonl`` flushes the metrics registry next to the streamed
+   events, and the JSONL is then *parsed back* and asserted to contain
+   solve rows with ``converged == true`` and assembly rows,
+4. the report CLI renders the log without error.
+
+Exit code 0 only if every check passes — this is the CI leg that keeps the
+telemetry layer honest (a refactor that silently stops recording fails
+here, not in production dashboards).
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.telemetry_smoke \
+        [--jsonl telemetry.jsonl] [--trace-dir telemetry_trace]
+"""
+
+import argparse
+import json
+import os
+
+from repro import telemetry
+from repro.core import unit_cube_tet
+from repro.fem import PoissonProblem
+
+
+def _load_rows(path: str) -> list[dict]:
+    with open(path) as f:
+        return [json.loads(line) for line in f if line.strip()]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--jsonl", default="telemetry.jsonl")
+    ap.add_argument("--trace-dir", default="telemetry_trace")
+    args = ap.parse_args(argv)
+
+    if os.path.exists(args.jsonl):
+        os.remove(args.jsonl)
+
+    telemetry.enable(jsonl=args.jsonl, on_nonconverged="raise")
+    prob = PoissonProblem(unit_cube_tet(6))
+    with telemetry.capture(args.trace_dir):
+        res_csr, info_csr = prob.solve(return_info=True)
+        res_mf, info_mf = prob.solve(backend="matfree", return_info=True)
+
+    assert bool(info_csr.converged), "assembled solve did not converge"
+    assert bool(info_mf.converged), "matrix-free solve did not converge"
+    err = float(abs(res_csr.u - res_mf.u).max())
+    assert err < 1e-8, f"matfree deviates from assembled solve: {err:.3e}"
+
+    telemetry.export_jsonl(args.jsonl)
+
+    rows = _load_rows(args.jsonl)
+    solves = [r for r in rows if r.get("kind") == "solve"]
+    assemblies = [r for r in rows if r.get("kind") == "assembly"]
+    metrics = [r for r in rows if r.get("kind") == "metric"]
+    assert solves, f"no solve rows in {args.jsonl}"
+    assert assemblies, f"no assembly rows in {args.jsonl}"
+    assert metrics, f"no metric rows in {args.jsonl}"
+    bad = [r["name"] for r in solves if not r.get("converged")]
+    assert not bad, f"solve rows without converged=true: {bad}"
+    backends = {r.get("backend") for r in solves}
+    assert "matfree" in backends, f"no matfree solve row (saw {backends})"
+    traces = [r for r in metrics if "jit_traces" in r["name"]]
+    assert traces, "no jit-trace counters in the metrics export"
+
+    trace_files = [
+        os.path.join(dp, fn)
+        for dp, _, fns in os.walk(args.trace_dir) for fn in fns
+    ]
+    assert trace_files, f"profiler capture wrote nothing under {args.trace_dir}"
+
+    # the report CLI must render the log it just produced
+    from repro.telemetry import report
+
+    rc = report.main([args.jsonl, "--snapshot"])
+    assert rc == 0, f"report CLI failed with exit code {rc}"
+
+    print(
+        f"telemetry smoke OK: {len(solves)} solve rows (converged), "
+        f"{len(assemblies)} assembly rows, {len(metrics)} metric rows, "
+        f"{len(trace_files)} trace files, matfree-vs-csr err {err:.2e}"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

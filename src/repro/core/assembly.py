@@ -36,6 +36,7 @@ The assembly subsystem is a **functional core** behind a thin class facade:
 from __future__ import annotations
 
 import dataclasses
+import time
 import warnings
 from functools import partial
 
@@ -43,6 +44,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import telemetry
+from ..telemetry import annotate
 from . import forms, weakform
 from .elements import get_element
 from .mesh import FunctionSpace
@@ -284,6 +287,10 @@ class AssemblyPlan:
 
     def csr(self, vals: jnp.ndarray) -> CSR:
         r = self.static.mat_routing
+        telemetry.gauge_set(
+            "csr_bytes",
+            int(r.nnz) * vals.dtype.itemsize + r.indptr.nbytes + r.indices.nbytes,
+        )
         return CSR(
             vals=vals,
             indptr=r.indptr,
@@ -342,7 +349,19 @@ def build_plan(space: FunctionSpace, quad_order: int | None = None,
         reduce_mode=reduce_mode,
         cell_dofs=jnp.asarray(space.cell_dofs),
     )
+    telemetry.gauge_set("plan_bytes", _plan_nbytes(static))
     return AssemblyPlan(jnp.asarray(mesh.points[mesh.cells]), static)
+
+
+def _plan_nbytes(static: PlanStatic) -> int:
+    """Host+device footprint of a plan's static tables and routing arrays."""
+
+    def nb(x) -> int:
+        if dataclasses.is_dataclass(x) and not isinstance(x, type):
+            return sum(nb(getattr(x, f.name)) for f in dataclasses.fields(x))
+        return int(getattr(x, "nbytes", 0) or 0)
+
+    return nb(static)
 
 
 # ---------------------------------------------------------------------------
@@ -406,38 +425,46 @@ def _eval_form(static: PlanStatic, coords, spec, leaves, arity: str):
     ``static`` carries the tables, ``coords``/``leaves`` are the traced
     inputs, ``spec`` is the static signature."""
     _N_CORE_TRACES[0] += 1
-    ctx = geometry_context(
-        coords, static.geo_phi, static.geo_grad, static.phi, static.gradhat,
-        static.w, scalar_cell_dofs=static.scalar_cell_dofs,
-    )
-    local_sum, facet_sums = _map_stage(static, ctx, spec, leaves)
+    telemetry.count_trace("assembly", static, spec)
+    with annotate("tg.map"):
+        ctx = geometry_context(
+            coords, static.geo_phi, static.geo_grad, static.phi,
+            static.gradhat, static.w,
+            scalar_cell_dofs=static.scalar_cell_dofs,
+        )
+        local_sum, facet_sums = _map_stage(static, ctx, spec, leaves)
     mode = static.reduce_mode
 
     if arity == weakform.MATRIX:
+        with annotate("tg.reduce"):
+            out = (
+                reduce_matrix(local_sum, static.mat_routing, mode)
+                if local_sum is not None
+                else jnp.zeros(
+                    (static.mat_routing.nnz,),
+                    dtype=_zero_fallback_dtype(coords, facet_sums),
+                )
+            )
+        with annotate("tg.facet_inject"):
+            for domain, loc in facet_sums.items():
+                fvals = reduce_matrix(loc, domain.mat_routing, mode)
+                # numpy precompute on static data, cached per (domain, routing)
+                inj = jnp.asarray(domain.injection_into(static.mat_routing))
+                out = out.at[inj].add(fvals.astype(out.dtype))
+        return out
+
+    with annotate("tg.reduce"):
         out = (
-            reduce_matrix(local_sum, static.mat_routing, mode)
+            reduce_vector(local_sum, static.vec_routing, mode)
             if local_sum is not None
             else jnp.zeros(
-                (static.mat_routing.nnz,),
+                (static.num_dofs,),
                 dtype=_zero_fallback_dtype(coords, facet_sums),
             )
         )
+    with annotate("tg.facet_inject"):
         for domain, loc in facet_sums.items():
-            fvals = reduce_matrix(loc, domain.mat_routing, mode)
-            # numpy precompute on static data, cached per (domain, routing)
-            inj = jnp.asarray(domain.injection_into(static.mat_routing))
-            out = out.at[inj].add(fvals.astype(out.dtype))
-        return out
-
-    out = (
-        reduce_vector(local_sum, static.vec_routing, mode)
-        if local_sum is not None
-        else jnp.zeros(
-            (static.num_dofs,), dtype=_zero_fallback_dtype(coords, facet_sums)
-        )
-    )
-    for domain, loc in facet_sums.items():
-        out = out + reduce_vector(loc, domain.vec_routing, mode)
+            out = out + reduce_vector(loc, domain.vec_routing, mode)
     return out
 
 
@@ -467,6 +494,7 @@ _FORM_FNS_LIMIT = 256
 
 def _cached_form_fn(key, build):
     fn = _FORM_FNS.get(key)
+    telemetry.count_cache("assembly_form_fn", hit=fn is not None)
     if fn is None:
         while len(_FORM_FNS) >= _FORM_FNS_LIMIT:
             _FORM_FNS.pop(next(iter(_FORM_FNS)))
@@ -480,7 +508,20 @@ def _assemble_flat(coords, leaves, *, static, spec, arity):
         ("single", static, spec, arity),
         lambda: lambda c, lv: _eval_form(static, c, spec, lv, arity),
     )
-    return fn(coords, leaves)
+    if not telemetry.is_enabled():
+        return fn(coords, leaves)
+    t0 = time.perf_counter()
+    out = fn(coords, leaves)
+    is_mat = arity == weakform.MATRIX
+    telemetry.record_assembly(
+        "assemble" if is_mat else "assemble_rhs",
+        num_dofs=static.num_dofs,
+        nnz=static.mat_routing.nnz if is_mat else None,
+        num_cells=int(coords.shape[0]),
+        form="+".join(kind for kind, _, _ in spec),
+        wall_us=(time.perf_counter() - t0) * 1e6,
+    )
+    return out
 
 
 def assemble(plan: AssemblyPlan, form, coords=None) -> CSR:
@@ -524,7 +565,19 @@ def _assemble_batched_flat(coords, leaves, *, static, spec, arity, axes):
         )(c, lv)
 
     fn = _cached_form_fn(("batched", static, spec, arity, axes), build)
-    return fn(coords, leaves)
+    if not telemetry.is_enabled():
+        return fn(coords, leaves)
+    t0 = time.perf_counter()
+    out = fn(coords, leaves)
+    is_mat = arity == weakform.MATRIX
+    telemetry.record_assembly(
+        "assemble_batched" if is_mat else "assemble_rhs_batched",
+        num_dofs=static.num_dofs,
+        nnz=static.mat_routing.nnz if is_mat else None,
+        form="+".join(kind for kind, _, _ in spec),
+        wall_us=(time.perf_counter() - t0) * 1e6,
+    )
+    return out
 
 
 def _lower_batched(plan, form, arity, coords_batch, leaves_batch):
@@ -627,7 +680,20 @@ def _assemble_sharded_flat(coords, leaves, *, static, spec, arity, mesh, axis_na
         lambda: partial(_sharded_impl, static=static, spec=spec, arity=arity,
                         mesh=mesh, axis_name=axis_name),
     )
-    return fn(coords, leaves)
+    if not telemetry.is_enabled():
+        return fn(coords, leaves)
+    t0 = time.perf_counter()
+    out = fn(coords, leaves)
+    is_mat = arity == weakform.MATRIX
+    telemetry.record_assembly(
+        "assemble_sharded" if is_mat else "assemble_rhs_sharded",
+        num_dofs=static.num_dofs,
+        nnz=static.mat_routing.nnz if is_mat else None,
+        num_cells=int(coords.shape[0]),
+        form="+".join(kind for kind, _, _ in spec),
+        wall_us=(time.perf_counter() - t0) * 1e6,
+    )
+    return out
 
 
 def _sharded_impl(coords, leaves, *, static, spec, arity, mesh, axis_name):
@@ -650,6 +716,7 @@ def _sharded_impl(coords, leaves, *, static, spec, arity, mesh, axis_name):
     from jax.sharding import PartitionSpec as P
 
     _N_CORE_TRACES[0] += 1
+    telemetry.count_trace("assembly", static, spec, backend="sharded")
     ndev = mesh.shape[axis_name]
     e = coords.shape[0]
     pad = (-e) % ndev

@@ -29,6 +29,7 @@ from __future__ import annotations
 
 from typing import Callable
 
+from .. import telemetry
 from .sparse import CSR, csr_to_ell
 
 __all__ = [
@@ -150,10 +151,12 @@ def _lookup(backend: str):
 
 def make_matvec(op, backend: str = "csr") -> Callable:
     """``x ↦ A @ x`` for the chosen inner-loop backend (table above)."""
+    telemetry.counter_inc("matvec_backend", 1, backend=backend, role="matvec")
     return _lookup(backend)[0](op)
 
 
 def make_residual(op, backend: str = "csr") -> Callable:
     """``(u, f) ↦ A·u − f`` — the Galerkin-residual inner op of the
     TensorPILS losses, fused where the backend supports it."""
+    telemetry.counter_inc("matvec_backend", 1, backend=backend, role="residual")
     return _lookup(backend)[1](op)

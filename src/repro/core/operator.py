@@ -47,6 +47,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from .. import telemetry
+from ..telemetry import annotate
 from . import forms, weakform
 from .assembly import AssemblyPlan, PlanStatic, geometry_context, reduce_vector
 from .sparse import _dev
@@ -277,15 +279,20 @@ class MatFreeOperator(LinearOperator):
 
     def _apply_impl(self, x, transpose: bool):
         _N_MF_TRACES[0] += 1
+        telemetry.count_trace("matfree", self.static, self.spec,
+                              backend=self.store)
         st = self.static
         if self.free_mask is not None:
             m = self.free_mask.astype(x.dtype)
             x_in = m * x
         else:
             x_in = x
-        xe = x_in[_dev(st.cell_dofs)]                    # gather (E, k)
-        y_local = self._local_apply(xe, transpose)       # per-element apply
-        y = reduce_vector(y_local, st.vec_routing, st.reduce_mode)  # scatter
+        with annotate("tg.matfree.gather"):
+            xe = x_in[_dev(st.cell_dofs)]                # gather (E, k)
+        with annotate("tg.matfree.action"):
+            y_local = self._local_apply(xe, transpose)   # per-element apply
+        with annotate("tg.matfree.scatter"):
+            y = reduce_vector(y_local, st.vec_routing, st.reduce_mode)
         if self.free_mask is not None:
             y = m * y + (1.0 - m) * x
         return y
@@ -407,4 +414,5 @@ def matfree_operator(plan: AssemblyPlan, form, store: str = "context",
             op, k_local=k_local, coords=None, leaves=(),
             spec=tuple((kind, None, ()) for kind, _, _ in spec),
         )
+    telemetry.gauge_set("operator_state_bytes", op.state_bytes(), store=store)
     return op

@@ -2,7 +2,10 @@
 
 * :func:`cg`, :func:`bicgstab` — preconditioned Krylov solvers as
   ``lax.while_loop`` (O(1) trace size; matches the paper's solver setup:
-  BiCGSTAB + Jacobi, tol 1e-10, maxiter 10k — SM Table B.1).
+  BiCGSTAB + Jacobi, tol 1e-10, maxiter 10k — SM Table B.1).  Both return
+  ``(x, SolveInfo)`` where :class:`SolveInfo` carries the iteration count,
+  the final residual norm and a ``converged`` flag set from the exit
+  condition — an exit at ``maxiter`` is *visible*, not silent garbage.
 * :func:`sparse_solve` — ``jax.custom_vjp``: the backward pass solves the
   adjoint system ``Kᵀλ = ḡ`` with the *same* solver and emits the **sparse**
   cotangent ``∂/∂vals = −λ[rows]·U[cols]`` (only at stored nnz positions) and
@@ -14,6 +17,16 @@
   cotangent as the vjp of ``θ ↦ A(θ)·x`` at ``−λ`` — so ``grad`` through a
   matrix-free solve matches the assembled adjoint path without ever
   materializing values.
+
+Convergence diagnostics (``repro.telemetry``): :func:`sparse_solve`,
+:func:`matfree_solve` and :func:`sparse_solve_batched` accept
+``return_info=True`` and then return ``(x, SolveInfo)``.  The info is a
+**non-differentiated auxiliary output** — its leaves are stop-gradient, so
+the ``custom_vjp`` adjoint structure is untouched and ``jax.grad`` through
+the info-returning path matches the plain path to machine precision.
+Forward *and* adjoint solve statistics are recorded to the telemetry event
+stream whenever values are concrete (eager boundaries); calls made under
+``jit``/``vmap``/``scan`` simply skip host recording (tracer-safe).
 
 ``cg`` / ``bicgstab`` accept either a matvec callable or any object with a
 ``.matvec`` method (CSR, MatFreeOperator); :func:`jacobi_preconditioner`
@@ -29,6 +42,7 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from ..telemetry import annotate, events
 from .sparse import CSR, BatchedCSR, _dev
 
 __all__ = [
@@ -43,8 +57,20 @@ __all__ = [
 
 
 class SolveInfo(NamedTuple):
+    """Per-solve diagnostics: iteration count, final residual norm, and the
+    exit condition (``converged = ‖r‖ ≤ max(tol·‖b‖, atol)``).  Leaves are
+    jnp arrays — a batched / per-step solve stacks them (``(B,)`` /
+    ``(n_steps,)``)."""
+
     iters: jnp.ndarray
     residual: jnp.ndarray
+    converged: jnp.ndarray
+
+
+def _info_aux(info: SolveInfo) -> SolveInfo:
+    """The info as a non-differentiated auxiliary output: stop-gradient on
+    every leaf, so returning it cannot perturb the adjoint structure."""
+    return SolveInfo(*(jax.lax.stop_gradient(leaf) for leaf in info))
 
 
 def jacobi_preconditioner(a) -> Callable:
@@ -96,8 +122,10 @@ def cg(matvec, b, x0=None, *, tol=1e-10, atol=1e-10, maxiter=10000, m=_identity)
         p = z + beta * p
         return (x, r, z, p, rz_new, it + 1)
 
-    x, r, *_, it = jax.lax.while_loop(cond, body, state)
-    return x, SolveInfo(it, jnp.linalg.norm(r))
+    with annotate("tg.solve.cg"):
+        x, r, *_, it = jax.lax.while_loop(cond, body, state)
+    rnorm = jnp.linalg.norm(r)
+    return x, SolveInfo(it, rnorm, rnorm <= target)
 
 
 # ---------------------------------------------------------------------------
@@ -143,8 +171,10 @@ def bicgstab(matvec, b, x0=None, *, tol=1e-10, atol=1e-10, maxiter=10000, m=_ide
         r = s_vec - omega * t
         return (x, r, rho_new, alpha, omega, v, p, it + 1)
 
-    x, r, *_, it = jax.lax.while_loop(cond, body, state)
-    return x, SolveInfo(it, jnp.linalg.norm(r))
+    with annotate("tg.solve.bicgstab"):
+        x, r, *_, it = jax.lax.while_loop(cond, body, state)
+    rnorm = jnp.linalg.norm(r)
+    return x, SolveInfo(it, rnorm, rnorm <= target)
 
 
 _METHODS = {"cg": cg, "bicgstab": bicgstab}
@@ -157,33 +187,55 @@ _METHODS = {"cg": cg, "bicgstab": bicgstab}
 def _solve_impl(a: CSR, b, method, tol, atol, maxiter, precond, transpose=False):
     matvec = a.rmatvec if transpose else a.matvec
     m = jacobi_preconditioner(a) if precond == "jacobi" else _identity
-    x, _ = _METHODS[method](matvec, b, tol=tol, atol=atol, maxiter=maxiter, m=m)
-    return x
+    return _METHODS[method](matvec, b, tol=tol, atol=atol, maxiter=maxiter, m=m)
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6))
-def sparse_solve(a: CSR, b, method="bicgstab", tol=1e-10, atol=1e-10,
-                 maxiter=10000, precond="jacobi"):
-    """x = A⁻¹ b, differentiable w.r.t. ``a.vals`` and ``b`` via the adjoint."""
-    return _solve_impl(a, b, method, tol, atol, maxiter, precond)
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6, 7))
+def _sparse_solve(a: CSR, b, method, tol, atol, maxiter, precond, return_info):
+    x, info = _solve_impl(a, b, method, tol, atol, maxiter, precond)
+    return (x, _info_aux(info)) if return_info else x
 
 
-def _solve_fwd(a, b, method, tol, atol, maxiter, precond):
-    x = _solve_impl(a, b, method, tol, atol, maxiter, precond)
-    return x, (a, x)
+def _solve_fwd(a, b, method, tol, atol, maxiter, precond, return_info):
+    x, info = _solve_impl(a, b, method, tol, atol, maxiter, precond)
+    out = (x, _info_aux(info)) if return_info else x
+    return out, (a, x)
 
 
-def _solve_bwd(method, tol, atol, maxiter, precond, res, g):
+def _solve_bwd(method, tol, atol, maxiter, precond, return_info, res, g):
     a, x = res
+    gx = g[0] if return_info else g
     # adjoint: Kᵀ λ = ḡ   (Eq. 11; sign handled by the chain rule caller)
-    lam = _solve_impl(a, g, method, tol, atol, maxiter, precond, transpose=True)
+    lam, adj_info = _solve_impl(a, gx, method, tol, atol, maxiter, precond,
+                                transpose=True)
+    # adjoint-solve diagnostics: recorded when the backward pass runs with
+    # concrete cotangents (eager grad); a no-op under further tracing
+    events.record_solve("sparse_solve.adjoint", adj_info, method=method,
+                        phase="adjoint")
     # ∂L/∂vals = −λ_r · x_c at each stored (r, c) — never densified
     dvals = -lam[_dev(a.row_of_nnz)] * x[_dev(a.indices)]
     da = CSR(dvals, a.indptr, a.indices, a.row_of_nnz, a.shape, a.diag_pos)
     return (da, lam)
 
 
-sparse_solve.defvjp(_solve_fwd, _solve_bwd)
+_sparse_solve.defvjp(_solve_fwd, _solve_bwd)
+
+
+def sparse_solve(a: CSR, b, method="bicgstab", tol=1e-10, atol=1e-10,
+                 maxiter=10000, precond="jacobi", return_info=False):
+    """x = A⁻¹ b, differentiable w.r.t. ``a.vals`` and ``b`` via the adjoint.
+
+    ``return_info=True`` additionally returns the :class:`SolveInfo`
+    (iterations / final residual / ``converged``) as a stop-gradient
+    auxiliary output — gradients are bit-identical to the plain path.
+    """
+    out = _sparse_solve(a, b, method, tol, atol, maxiter, precond,
+                        bool(return_info))
+    if return_info:
+        x, info = out
+        events.record_solve("sparse_solve", info, method=method, backend="csr")
+        return x, info
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -193,13 +245,39 @@ sparse_solve.defvjp(_solve_fwd, _solve_bwd)
 def _op_solve_impl(op, b, method, tol, atol, maxiter, precond, transpose=False):
     matvec = op.rmatvec if transpose else op.matvec
     m = jacobi_preconditioner(op) if precond == "jacobi" else _identity
-    x, _ = _METHODS[method](matvec, b, tol=tol, atol=atol, maxiter=maxiter, m=m)
-    return x
+    return _METHODS[method](matvec, b, tol=tol, atol=atol, maxiter=maxiter, m=m)
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6))
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6, 7))
+def _matfree_solve(op, b, method, tol, atol, maxiter, precond, return_info):
+    x, info = _op_solve_impl(op, b, method, tol, atol, maxiter, precond)
+    return (x, _info_aux(info)) if return_info else x
+
+
+def _matfree_fwd(op, b, method, tol, atol, maxiter, precond, return_info):
+    x, info = _op_solve_impl(op, b, method, tol, atol, maxiter, precond)
+    out = (x, _info_aux(info)) if return_info else x
+    return out, (op, x)
+
+
+def _matfree_bwd(method, tol, atol, maxiter, precond, return_info, res, g):
+    op, x = res
+    gx = g[0] if return_info else g
+    lam, adj_info = _op_solve_impl(op, gx, method, tol, atol, maxiter, precond,
+                                   transpose=True)
+    events.record_solve("matfree_solve.adjoint", adj_info, method=method,
+                        phase="adjoint")
+    # ∂L/∂θ = −λᵀ (∂A/∂θ) x — the vjp of the apply w.r.t. the operator pytree
+    _, pullback = jax.vjp(lambda o: o.matvec(x), op)
+    (d_op,) = pullback(-lam)
+    return (d_op, lam)
+
+
+_matfree_solve.defvjp(_matfree_fwd, _matfree_bwd)
+
+
 def matfree_solve(op, b, method="cg", tol=1e-10, atol=1e-10,
-                  maxiter=10000, precond="jacobi"):
+                  maxiter=10000, precond="jacobi", return_info=False):
     """``x = A⁻¹ b`` for any pytree linear operator with ``matvec`` /
     ``rmatvec`` / ``diagonal`` — differentiable w.r.t. the operator's traced
     leaves (coefficients, geometry) *and* ``b`` via the adjoint solve.
@@ -209,41 +287,42 @@ def matfree_solve(op, b, method="cg", tol=1e-10, atol=1e-10,
     :class:`~repro.core.operator.MatFreeOperator` that is one extra
     matrix-free apply-transpose, never an assembled matrix.  (A :class:`CSR`
     works too and reproduces :func:`sparse_solve`'s sparse cotangent.)
+
+    ``return_info=True`` additionally returns the :class:`SolveInfo` as a
+    stop-gradient auxiliary output (gradients match the plain path).
     """
-    return _op_solve_impl(op, b, method, tol, atol, maxiter, precond)
-
-
-def _matfree_fwd(op, b, method, tol, atol, maxiter, precond):
-    x = _op_solve_impl(op, b, method, tol, atol, maxiter, precond)
-    return x, (op, x)
-
-
-def _matfree_bwd(method, tol, atol, maxiter, precond, res, g):
-    op, x = res
-    lam = _op_solve_impl(op, g, method, tol, atol, maxiter, precond,
-                         transpose=True)
-    # ∂L/∂θ = −λᵀ (∂A/∂θ) x — the vjp of the apply w.r.t. the operator pytree
-    _, pullback = jax.vjp(lambda o: o.matvec(x), op)
-    (d_op,) = pullback(-lam)
-    return (d_op, lam)
-
-
-matfree_solve.defvjp(_matfree_fwd, _matfree_bwd)
+    out = _matfree_solve(op, b, method, tol, atol, maxiter, precond,
+                         bool(return_info))
+    if return_info:
+        x, info = out
+        events.record_solve("matfree_solve", info, method=method,
+                            backend="matfree")
+        return x, info
+    return out
 
 
 def sparse_solve_batched(a: BatchedCSR, b, method="bicgstab", tol=1e-10,
-                         atol=1e-10, maxiter=10000, precond="jacobi"):
+                         atol=1e-10, maxiter=10000, precond="jacobi",
+                         return_info=False):
     """X_b = A_b⁻¹ b_b over a :class:`BatchedCSR` family — one ``vmap`` of the
     differentiable :func:`sparse_solve`, so the B Krylov solves share a
     single XLA executable (and a single adjoint executable under ``grad``).
 
-    ``b`` is ``(B, n)`` per-instance or ``(n,)`` shared; returns ``(B, n)``.
+    ``b`` is ``(B, n)`` per-instance or ``(n,)`` shared; returns ``(B, n)``
+    (plus a ``SolveInfo`` with ``(B,)`` leaves under ``return_info=True``).
     """
     b = jnp.asarray(b)
     in_b = None if b.ndim == 1 else 0
-    return jax.vmap(
-        lambda ab, bi: sparse_solve(
-            ab.as_csr(), bi, method, tol, atol, maxiter, precond
+    out = jax.vmap(
+        lambda ab, bi: _sparse_solve(
+            ab.as_csr(), bi, method, tol, atol, maxiter, precond,
+            bool(return_info),
         ),
         in_axes=(0, in_b),
     )(a, b)
+    if return_info:
+        x, info = out
+        events.record_solve("sparse_solve_batched", info, method=method,
+                            backend="csr")
+        return x, info
+    return out

@@ -10,12 +10,15 @@ Problem classes own (mesh → space → assembler → condenser) and expose:
 from __future__ import annotations
 
 import dataclasses
+import time
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import telemetry
+from ..telemetry import events
 from ..core import (
     DirichletCondenser,
     FacetAssembler,
@@ -44,6 +47,7 @@ class _SolveResult:
     u: jnp.ndarray
     iters: int
     residual: float
+    converged: bool = True
 
 
 class _ProblemBase:
@@ -63,17 +67,30 @@ class _ProblemBase:
             return self.backend
         return "ell" if self.use_ell else "csr"
 
-    def _solve_system(self, k, f, tol=1e-10, maxiter=10000, backend=None):
+    def _solve_system(self, k, f, tol=1e-10, maxiter=10000, backend=None,
+                      return_info=False):
         """Krylov solve on an assembled operator with the inner matvec from
-        the unified registry (:mod:`repro.core.matvec`)."""
+        the unified registry (:mod:`repro.core.matvec`).  A ``maxiter`` exit
+        is reported through :func:`repro.telemetry.check_convergence`
+        (warn/raise per policy) and the ``converged`` flag on the result;
+        ``return_info=True`` appends the raw
+        :class:`~repro.core.solvers.SolveInfo`."""
         solver = cg if self.method == "cg" else bicgstab
-        matvec = make_matvec(k, backend or self._default_backend())
+        be = backend or self._default_backend()
+        matvec = make_matvec(k, be)
+        t0 = time.perf_counter()
         u, info = solver(matvec, f, m=jacobi_preconditioner(k), tol=tol, maxiter=maxiter)
+        where = f"{type(self).__name__}.solve"
+        events.check_convergence(info, where=where)
+        if telemetry.is_enabled():
+            events.record_solve(where, info, method=self.method, backend=be,
+                                wall_us=(time.perf_counter() - t0) * 1e6)
         rel = float(jnp.linalg.norm(k.matvec(u) - f) / jnp.linalg.norm(f))
-        return _SolveResult(u, int(info.iters), rel)
+        res = _SolveResult(u, int(info.iters), rel, bool(info.converged))
+        return (res, info) if return_info else res
 
     def _solve_matfree(self, form, load, tol=1e-10, maxiter=10000,
-                       dirichlet_values=0.0):
+                       dirichlet_values=0.0, return_info=False):
         """Matrix-free Krylov solve: the operator applies ``form`` straight
         from the plan (element-local Map → per-element action →
         scatter-Reduce), Jacobi from a diagonal-only assembly, Dirichlet
@@ -90,10 +107,18 @@ class _ProblemBase:
         else:
             f = self.bc.lift(op_full, load, dirichlet_values)
         solver = cg if self.method == "cg" else bicgstab
+        t0 = time.perf_counter()
         u, info = solver(op.matvec, f, m=jacobi_preconditioner(op),
                          tol=tol, maxiter=maxiter)
+        where = f"{type(self).__name__}.solve"
+        events.check_convergence(info, where=where)
+        if telemetry.is_enabled():
+            events.record_solve(where, info, method=self.method,
+                                backend="matfree",
+                                wall_us=(time.perf_counter() - t0) * 1e6)
         rel = float(jnp.linalg.norm(op.matvec(u) - f) / jnp.linalg.norm(f))
-        return _SolveResult(u, int(info.iters), rel)
+        res = _SolveResult(u, int(info.iters), rel, bool(info.converged))
+        return (res, info) if return_info else res
 
 
 class PoissonProblem(_ProblemBase):
@@ -110,14 +135,19 @@ class PoissonProblem(_ProblemBase):
         load = self.asm.assemble_rhs(wf.source(f))
         return self.bc.apply(k, load)
 
-    def solve(self, rho=None, f=1.0, tol=1e-10, backend=None):
+    def solve(self, rho=None, f=1.0, tol=1e-10, backend=None,
+              return_info=False):
         """Solve with a registry-selected matvec backend; ``"matfree"``
-        skips matrix assembly entirely (only the RHS vector is assembled)."""
+        skips matrix assembly entirely (only the RHS vector is assembled).
+        ``return_info=True`` appends the raw
+        :class:`~repro.core.solvers.SolveInfo`."""
         if backend == "matfree":
             load = self.asm.assemble_rhs(wf.source(f))
-            return self._solve_matfree(wf.diffusion(rho), load, tol)
+            return self._solve_matfree(wf.diffusion(rho), load, tol,
+                                       return_info=return_info)
         k, load = self.assemble(rho, f)
-        return self._solve_system(k, load, tol, backend=backend)
+        return self._solve_system(k, load, tol, backend=backend,
+                                  return_info=return_info)
 
     # -- many-query batched data generation (SM B.1.4) ------------------------
     def solve_batch(self, f_batch: jnp.ndarray, rho=None, tol=1e-10, maxiter=2000):
@@ -178,14 +208,16 @@ class AdvectionDiffusionProblem(_ProblemBase):
         return self.bc.apply(k, load, dirichlet_values)
 
     def solve(self, eps=1.0, beta=(1.0, 0.0), f=1.0, dirichlet_values=0.0,
-              tol=1e-10, backend=None):
+              tol=1e-10, backend=None, return_info=False):
         if backend == "matfree":
             form = wf.diffusion(eps) + wf.advection(jnp.asarray(beta))
             load = self.asm.assemble_rhs(wf.source(f))
             return self._solve_matfree(form, load, tol,
-                                       dirichlet_values=dirichlet_values)
+                                       dirichlet_values=dirichlet_values,
+                                       return_info=return_info)
         k, load = self.assemble(eps, beta, f, dirichlet_values)
-        return self._solve_system(k, load, tol, backend=backend)
+        return self._solve_system(k, load, tol, backend=backend,
+                                  return_info=return_info)
 
 
 class ElasticityProblem(_ProblemBase):
@@ -209,16 +241,19 @@ class ElasticityProblem(_ProblemBase):
         f = self.asm.assemble_rhs(wf.source(bf))
         return self.bc.apply(k, f)
 
-    def solve(self, body_force=None, tol=1e-10, backend=None):
+    def solve(self, body_force=None, tol=1e-10, backend=None,
+              return_info=False):
         if backend == "matfree":
             d = self.mesh.dim
             bf = jnp.ones(d) if body_force is None else jnp.asarray(body_force)
             load = self.asm.assemble_rhs(wf.source(bf))
             return self._solve_matfree(
-                wf.elasticity(self.lam, self.mu), load, tol
+                wf.elasticity(self.lam, self.mu), load, tol,
+                return_info=return_info,
             )
         k, f = self.assemble(body_force)
-        return self._solve_system(k, f, tol, backend=backend)
+        return self._solve_system(k, f, tol, backend=backend,
+                                  return_info=return_info)
 
 
 class MixedBCPoisson(_ProblemBase):
@@ -265,7 +300,8 @@ class MixedBCPoisson(_ProblemBase):
         self._ctx_r = self._fa_r.context() if self._fa_r is not None else None
 
     def solve(self, f, g_neumann=None, robin_alpha=1.0, g_robin=None,
-              dirichlet_values=None, rho=None, tol=1e-10, backend=None):
+              dirichlet_values=None, rho=None, tol=1e-10, backend=None,
+              return_info=False):
         if backend == "matfree":
             raise NotImplementedError(
                 "MixedBCPoisson has Robin facet terms, which the matrix-free "
@@ -300,4 +336,5 @@ class MixedBCPoisson(_ProblemBase):
             d_dofs = self.bc.bc_dofs
             bvals = jnp.asarray(dirichlet_values(self.space.dof_points[d_dofs]))
         kc, fc = self.bc.apply(k, load, bvals)
-        return self._solve_system(kc, fc, tol, backend=backend)
+        return self._solve_system(kc, fc, tol, backend=backend,
+                                  return_info=return_info)

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from ..telemetry import annotate
+
 __all__ = ["build_padded_reduce", "seg_reduce"]
 
 BLOCK_N = 4096
@@ -55,15 +57,16 @@ def seg_reduce(local_vals: jnp.ndarray, padded_idx: jnp.ndarray, *,
     n_pad = -(-nnz // block_n) * block_n
     idx = jnp.pad(jnp.asarray(padded_idx, jnp.int32),
                   ((0, n_pad - nnz), (0, 0)), constant_values=v.shape[0])
-    out = pl.pallas_call(
-        _kernel,
-        grid=(n_pad // block_n,),
-        in_specs=[
-            pl.BlockSpec((block_n, l), lambda i: (i, 0)),
-            pl.BlockSpec((src.shape[0],), lambda i: (0,)),
-        ],
-        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((n_pad,), v.dtype),
-        interpret=interpret,
-    )(idx, src)
+    with annotate("tg.pallas.seg_reduce"):
+        out = pl.pallas_call(
+            _kernel,
+            grid=(n_pad // block_n,),
+            in_specs=[
+                pl.BlockSpec((block_n, l), lambda i: (i, 0)),
+                pl.BlockSpec((src.shape[0],), lambda i: (0,)),
+            ],
+            out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+            out_shape=jax.ShapeDtypeStruct((n_pad,), v.dtype),
+            interpret=interpret,
+        )(idx, src)
     return out[:nnz]

@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..telemetry import annotate
+
 __all__ = ["spmv_ell", "galerkin_residual_ell"]
 
 BLOCK_N = 4096
@@ -60,18 +62,19 @@ def spmv_ell(vals: jnp.ndarray, cols: jnp.ndarray, x: jnp.ndarray, *,
     vals_p = _pad_rows(vals, n_pad)
     cols_p = _pad_rows(cols.astype(jnp.int32), n_pad)
     grid = (n_pad // block_n,)
-    out = pl.pallas_call(
-        _spmv_kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_n, l), lambda i: (i, 0)),
-            pl.BlockSpec((block_n, l), lambda i: (i, 0)),
-            pl.BlockSpec((n,), lambda i: (0,)),
-        ],
-        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((n_pad,), vals.dtype),
-        interpret=interpret,
-    )(vals_p, cols_p, x)
+    with annotate("tg.pallas.spmv_ell"):
+        out = pl.pallas_call(
+            _spmv_kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_n, l), lambda i: (i, 0)),
+                pl.BlockSpec((block_n, l), lambda i: (i, 0)),
+                pl.BlockSpec((n,), lambda i: (0,)),
+            ],
+            out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+            out_shape=jax.ShapeDtypeStruct((n_pad,), vals.dtype),
+            interpret=interpret,
+        )(vals_p, cols_p, x)
     return out[:n]
 
 
@@ -85,17 +88,18 @@ def galerkin_residual_ell(vals, cols, u, f, *, interpret: bool = True,
     cols_p = _pad_rows(cols.astype(jnp.int32), n_pad)
     f_p = jnp.pad(f, (0, n_pad - n))
     grid = (n_pad // block_n,)
-    out = pl.pallas_call(
-        _residual_kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_n, l), lambda i: (i, 0)),
-            pl.BlockSpec((block_n, l), lambda i: (i, 0)),
-            pl.BlockSpec((n,), lambda i: (0,)),
-            pl.BlockSpec((block_n,), lambda i: (i,)),
-        ],
-        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((n_pad,), vals.dtype),
-        interpret=interpret,
-    )(vals_p, cols_p, u, f_p)
+    with annotate("tg.pallas.galerkin_residual_ell"):
+        out = pl.pallas_call(
+            _residual_kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_n, l), lambda i: (i, 0)),
+                pl.BlockSpec((block_n, l), lambda i: (i, 0)),
+                pl.BlockSpec((n,), lambda i: (0,)),
+                pl.BlockSpec((block_n,), lambda i: (i,)),
+            ],
+            out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+            out_shape=jax.ShapeDtypeStruct((n_pad,), vals.dtype),
+            interpret=interpret,
+        )(vals_p, cols_p, u, f_p)
     return out[:n]

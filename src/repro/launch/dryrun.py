@@ -1,9 +1,3 @@
-import os
-
-os.environ["XLA_FLAGS"] = (
-    os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
-).strip()
-
 """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
 
 For each cell this:
@@ -23,30 +17,45 @@ Skip rules (recorded, not silently dropped):
   * every skip lands in the JSON with its reason.
 """
 
-import argparse  # noqa: E402
-import dataclasses  # noqa: E402
-import json  # noqa: E402
-import time  # noqa: E402
-import traceback  # noqa: E402
+import argparse
+import dataclasses
+import json
+import os
+import time
+import traceback
 
-import jax  # noqa: E402
-import numpy as np  # noqa: E402
+import jax
+import numpy as np
 
-from ..analysis.roofline import analyze_compiled  # noqa: E402
-from ..configs import ARCHS, SHAPES  # noqa: E402
-from ..configs.base import ArchConfig, ShapeSpec  # noqa: E402
-from ..models.layers import abstract_params  # noqa: E402
-from ..models.model_zoo import build_model  # noqa: E402
-from ..sharding.partitioning import (  # noqa: E402
+from ..analysis.roofline import analyze_compiled
+from ..configs import ARCHS, SHAPES
+from ..configs.base import ArchConfig, ShapeSpec
+from ..models.layers import abstract_params
+from ..models.model_zoo import build_model
+from ..sharding.partitioning import (
     RULES_MULTI_POD,
     RULES_SINGLE_POD,
     ShardingRules,
     make_shardings,
     use_rules,
 )
-from ..train.serve_step import serve_param_specs  # noqa: E402
-from ..train.train_step import make_train_state_specs, make_train_step  # noqa: E402
-from .mesh import make_production_mesh  # noqa: E402
+from ..train.serve_step import serve_param_specs
+from ..train.train_step import make_train_state_specs, make_train_step
+from .mesh import make_production_mesh
+
+
+def force_host_devices(count: int = 512) -> None:
+    """Configure XLA's host-platform device count for the dry-run mesh.
+
+    Must run before jax initializes its backends, and only from a CLI entry
+    point — importing this module for tooling must not reconfigure the
+    process (the mutation used to happen at import time and leaked into
+    every importer).
+    """
+    flag = f"--xla_force_host_platform_device_count={count}"
+    flags = os.environ.get("XLA_FLAGS", "")
+    if flag not in flags:
+        os.environ["XLA_FLAGS"] = f"{flags} {flag}".strip()
 
 
 def should_skip(cfg: ArchConfig, shape: ShapeSpec) -> str | None:
@@ -186,6 +195,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
 
 
 def main():
+    force_host_devices()
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)

@@ -1,9 +1,3 @@
-import os
-
-os.environ["XLA_FLAGS"] = (
-    os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
-).strip()
-
 """Perf-iteration harness (§Perf): re-lower a dry-run cell under a named
 optimization variant and diff the roofline terms against baseline.
 
@@ -27,13 +21,14 @@ hypothesis in EXPERIMENTS.md §Perf maps to one named entry here:
   nomicro       halve grad-accum microbatches (×2 microbatch size).
 """
 
-import argparse  # noqa: E402
-import dataclasses  # noqa: E402
-import json  # noqa: E402
+import argparse
+import dataclasses
+import json
+import os
 
-from ..configs import ARCHS, SHAPES  # noqa: E402
-from ..sharding.partitioning import RULES_SINGLE_POD, ShardingRules  # noqa: E402
-from .dryrun import run_cell  # noqa: E402
+from ..configs import ARCHS, SHAPES  # noqa: F401
+from ..sharding.partitioning import RULES_SINGLE_POD, ShardingRules
+from .dryrun import force_host_devices, run_cell
 
 
 def _patched_rules(base: ShardingRules, patch: dict) -> ShardingRules:
@@ -89,6 +84,7 @@ def run_variant(arch: str, shape: str, variant: str) -> dict:
 
 
 def main():
+    force_host_devices()
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--shape", required=True)

@@ -1,0 +1,71 @@
+"""repro.telemetry — convergence diagnostics, named-phase profiler tracing,
+and a unified runtime metrics/event layer.
+
+The paper's claim is *efficiency*; this package is how the repo sees it:
+
+* **Convergence diagnostics** — every Krylov solve carries a
+  ``SolveInfo(iters, residual, converged)``; the ``return_info=True`` paths
+  on :func:`repro.core.sparse_solve` / :func:`repro.core.matfree_solve` /
+  the transient integrators expose it as a non-differentiated auxiliary
+  output (stop-gradient leaves — gradients match the plain path to machine
+  precision), and :func:`check_convergence` turns a silent ``maxiter`` exit
+  into a warning or error.
+* **Named-phase tracing** — :class:`annotate` stamps the Map / Reduce /
+  gather / scatter / Pallas stages with names visible in a profile;
+  :func:`capture` records a TensorBoard/Perfetto trace of any block.
+* **Metrics & events** — a process-global registry (jit-trace and
+  cache counters unifying ``n_core_traces``/``n_matfree_traces``, memory
+  gauges, iteration/wall-time histograms) plus a structured event stream
+  with JSON-lines export in the ``BENCH_JSON`` row format; rendered by
+  ``python -m repro.telemetry.report``.
+
+Disabled by default and zero-cost when off: recording entry points return
+after one boolean check, annotations are trace-time-only, nothing telemetry
+does is ever staged into a jaxpr (so toggling cannot retrace), and tracers
+are never captured into host state.  Enable with :func:`enable` (or
+``REPRO_TELEMETRY=1`` in the environment).
+
+This package deliberately imports nothing from :mod:`repro.core` — the core
+imports *it*.
+"""
+
+from .events import (  # noqa: F401
+    ConvergenceWarning,
+    NonConvergedError,
+    check_convergence,
+    clear_events,
+    event_log,
+    record_assembly,
+    record_event,
+    record_solve,
+)
+from .metrics import (  # noqa: F401
+    count_cache,
+    count_trace,
+    counter_inc,
+    disable,
+    enable,
+    enabled,
+    export_jsonl,
+    gauge_set,
+    histogram_observe,
+    is_enabled,
+    jit_trace_total,
+    jsonl_path,
+    reset,
+    snapshot,
+)
+from .trace import annotate, capture  # noqa: F401
+
+__all__ = [
+    # switchboard
+    "enable", "disable", "enabled", "is_enabled", "reset", "jsonl_path",
+    # tracing
+    "annotate", "capture",
+    # metrics
+    "counter_inc", "gauge_set", "histogram_observe", "count_trace",
+    "count_cache", "jit_trace_total", "snapshot", "export_jsonl",
+    # events / convergence
+    "record_event", "record_solve", "record_assembly", "check_convergence",
+    "event_log", "clear_events", "ConvergenceWarning", "NonConvergedError",
+]

@@ -1,0 +1,152 @@
+"""Render a telemetry run (JSONL events + metrics) as markdown tables.
+
+    PYTHONPATH=src python -m repro.telemetry.report telemetry_events.jsonl
+
+Reads the JSON-lines stream written by an enabled telemetry session
+(``telemetry.enable(jsonl=...)`` + ``telemetry.export_jsonl()``) and prints
+a run summary in the style of :mod:`repro.analysis.report`: one table per
+row family (solves, assemblies, counters/gauges, histograms).  With
+``--snapshot`` it renders the **current process** registry instead — useful
+at the end of an instrumented script.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import defaultdict
+
+from . import metrics
+
+
+def load_rows(path: str) -> list[dict]:
+    rows = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                rows.append(json.loads(line))
+    return rows
+
+
+def _fmt(x, spec: str = "") -> str:
+    if x is None:
+        return "—"
+    if isinstance(x, float):
+        return format(x, spec or ".4g")
+    return str(x)
+
+
+def solve_table(rows: list[dict]) -> str:
+    out = [
+        "| solve | n | iters (Σ/max) | final residual | converged | wall |",
+        "|---|---|---|---|---|---|",
+    ]
+    groups: dict[str, list[dict]] = defaultdict(list)
+    for r in rows:
+        if r.get("kind") == "solve":
+            groups[r["name"]].append(r)
+    for name, rs in groups.items():
+        iters = [r.get("iterations", 0) for r in rs]
+        res = [r.get("final_residual") for r in rs if r.get("final_residual") is not None]
+        conv = all(r.get("converged", False) for r in rs)
+        walls = [r["us_per_call"] for r in rs if r.get("us_per_call")]
+        wall = f"{sum(walls) / len(walls):.0f}µs" if walls else "—"
+        out.append(
+            f"| {name} | {len(rs)} | {sum(iters)}/{max(iters) if iters else 0} "
+            f"| {_fmt(max(res) if res else None, '.2e')} "
+            f"| {'✓' if conv else '**✗**'} | {wall} |"
+        )
+    return "\n".join(out)
+
+
+def assembly_table(rows: list[dict]) -> str:
+    out = [
+        "| assembly | n | dofs | nnz | cells | form |",
+        "|---|---|---|---|---|---|",
+    ]
+    groups: dict[tuple, list[dict]] = defaultdict(list)
+    for r in rows:
+        if r.get("kind") == "assembly":
+            groups[(r["name"], r.get("form"))].append(r)
+    for (name, form), rs in groups.items():
+        r0 = rs[-1]
+        out.append(
+            f"| {name} | {len(rs)} | {_fmt(r0.get('num_dofs'))} "
+            f"| {_fmt(r0.get('nnz'))} | {_fmt(r0.get('num_cells'))} "
+            f"| {form or '—'} |"
+        )
+    return "\n".join(out)
+
+
+def metric_table(rows: list[dict]) -> str:
+    out = ["| metric | value |", "|---|---|"]
+    for r in rows:
+        if r.get("kind") == "metric" and r.get("metric") in ("counter", "gauge"):
+            out.append(f"| {r['name'].removeprefix('metric/')} | {_fmt(r.get('value'))} |")
+    return "\n".join(out)
+
+
+def histogram_table(rows: list[dict]) -> str:
+    out = [
+        "| histogram | count | mean | p50 | p90 | p99 | max |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r.get("kind") == "metric" and r.get("metric") == "histogram":
+            out.append(
+                f"| {r['name'].removeprefix('metric/histogram/')} "
+                f"| {_fmt(r.get('count'))} | {_fmt(r.get('mean'))} "
+                f"| {_fmt(r.get('p50'))} | {_fmt(r.get('p90'))} "
+                f"| {_fmt(r.get('p99'))} | {_fmt(r.get('max'))} |"
+            )
+    return "\n".join(out)
+
+
+def render(rows: list[dict]) -> str:
+    parts = []
+    kinds = {r.get("kind") for r in rows}
+    if "solve" in kinds:
+        parts += ["### Solves\n", solve_table(rows), ""]
+    if "assembly" in kinds:
+        parts += ["### Assemblies\n", assembly_table(rows), ""]
+    if any(r.get("metric") in ("counter", "gauge") for r in rows):
+        parts += ["### Counters & gauges\n", metric_table(rows), ""]
+    if any(r.get("metric") == "histogram" for r in rows):
+        parts += ["### Histograms\n", histogram_table(rows), ""]
+    other = [r for r in rows if r.get("kind") not in ("solve", "assembly", "metric")]
+    if other:
+        parts.append("### Other events\n")
+        for r in other:
+            parts.append(f"- `{r.get('name', '?')}` {r.get('derived', '')}")
+        parts.append("")
+    if not parts:
+        parts = ["(no telemetry rows)"]
+    return "\n".join(parts)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("path", nargs="?", default="telemetry_events.jsonl",
+                    help="JSON-lines event file (default: %(default)s)")
+    ap.add_argument("--snapshot", action="store_true",
+                    help="render the current in-process metrics registry "
+                         "instead of reading a file")
+    args = ap.parse_args(argv)
+    if args.snapshot:
+        rows = metrics.metric_rows()
+    else:
+        try:
+            rows = load_rows(args.path)
+        except FileNotFoundError:
+            print(f"no such file: {args.path} (run with telemetry.enable"
+                  f"(jsonl=...) to produce one, or use --snapshot)",
+                  file=sys.stderr)
+            return 2
+    print(render(rows))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,89 @@
+"""Named-phase profiler tracing: FEM phases visible in Perfetto/TensorBoard.
+
+A profile of a Galerkin solve is otherwise a wall of anonymous XLA fusions.
+:class:`annotate` stamps a phase name onto everything traced (or executed)
+under it by composing the two jax mechanisms that cover both worlds:
+
+* ``jax.named_scope`` — pushes the name onto the jaxpr name stack, so the
+  *compiled* HLO ops carry it (device timeline in a captured profile);
+* ``jax.profiler.TraceAnnotation`` — a host TraceMe, so eager/host-side
+  sections show up on the host timeline.
+
+Inside jitted code both run at **trace time only**: annotating the Map /
+Reduce / gather / scatter / Pallas stages costs nothing per call once the
+executable is compiled, which is what lets the hot paths stay annotated
+unconditionally (no telemetry flag, no retrace risk).
+
+:func:`capture` wraps ``jax.profiler.trace``: everything run inside the
+``with`` block lands in a TensorBoard/Perfetto-loadable profile directory
+(``<path>/plugins/profile/<ts>/*.xplane.pb`` + ``*.trace.json.gz``).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import functools
+import os
+
+import jax
+
+from . import events
+
+__all__ = ["annotate", "capture"]
+
+
+class annotate:
+    """Name a phase: context manager *and* decorator.
+
+    ::
+
+        with annotate("tg.reduce"):
+            vals = segment_sum(...)
+
+        @annotate("tg.map")
+        def map_stage(...): ...
+    """
+
+    def __init__(self, name: str):
+        self.name = name
+        self._stack: contextlib.ExitStack | None = None
+
+    def __enter__(self):
+        self._stack = contextlib.ExitStack()
+        self._stack.enter_context(jax.named_scope(self.name))
+        self._stack.enter_context(jax.profiler.TraceAnnotation(self.name))
+        return self
+
+    def __exit__(self, *exc):
+        stack, self._stack = self._stack, None
+        return stack.__exit__(*exc)
+
+    def __call__(self, fn):
+        @functools.wraps(fn)
+        def wrapped(*args, **kwargs):
+            # a fresh instance per call: the context manager is one-shot
+            with annotate(self.name):
+                return fn(*args, **kwargs)
+
+        return wrapped
+
+
+@contextlib.contextmanager
+def capture(path: str, *, create_perfetto_link: bool = False):
+    """Capture a profiler trace of the enclosed block into ``path``.
+
+    ::
+
+        with telemetry.capture("/tmp/tg_profile"):
+            u = prob.solve(backend="matfree")
+
+    The directory is TensorBoard-loadable (``tensorboard --logdir path``)
+    and contains a gzipped Chrome/Perfetto trace; phases wrapped in
+    :class:`annotate` (Map, Reduce, gather/scatter, Pallas kernels, Krylov
+    loops) appear by name instead of anonymous XLA ops.  Emits a
+    ``trace_captured`` telemetry event when recording is enabled.
+    """
+    os.makedirs(path, exist_ok=True)
+    with jax.profiler.trace(path, create_perfetto_link=create_perfetto_link):
+        yield
+    events.record_event("profile", "trace_captured", path=path)

@@ -32,6 +32,7 @@ from ..core.boundary import DirichletCondenser
 from ..core.matvec import make_matvec
 from ..core.solvers import sparse_solve
 from ..core.sparse import CSR
+from ..telemetry import events
 from .stepping import axpy_csr, segmented_scan
 
 __all__ = ["NewmarkIntegrator"]
@@ -78,33 +79,42 @@ class NewmarkIntegrator:
             self.mass_c, self._mask(r), self.solver, self.tol, self.tol, self.maxiter
         )
 
-    def step(self, u, v, a, load=None):
+    def step(self, u, v, a, load=None, return_info=False):
         dt, beta, gamma = self.dt, self.beta, self.gamma
         u_star = u + dt * v + 0.5 * dt**2 * (1 - 2 * beta) * a
         v_star = v + dt * (1 - gamma) * a
         rhs = -self._stiff_mv(u_star)
         if load is not None:
             rhs = rhs + load
-        a_new = sparse_solve(
-            self.lhs, self._mask(rhs), self.solver, self.tol, self.tol, self.maxiter
+        out = sparse_solve(
+            self.lhs, self._mask(rhs), self.solver, self.tol, self.tol,
+            self.maxiter, return_info=return_info,
         )
+        a_new, info = out if return_info else (out, None)
         u_new = u_star + beta * dt**2 * a_new
         if self.bc is not None:
             # constrained DoFs stay at their (initial) boundary values
             u_new = u_new * self.bc.free_mask + u * (1.0 - self.bc.free_mask)
         v_new = v_star + gamma * dt * a_new
+        if return_info:
+            return u_new, v_new, a_new, info
         return u_new, v_new, a_new
 
     def rollout(self, u0, n_steps: int, *, v0=None, loads=None, load0=None,
                 checkpoint_every: int | None = None,
-                return_velocity: bool = False):
+                return_velocity: bool = False,
+                return_info: bool = False):
         """Scan ``n_steps`` Newmark steps; returns ``(n_steps, N)``
         displacements (u0 excluded), or ``(u_traj, v_traj)`` when
         ``return_velocity``.  ``loads``: None | (N,) | (n_steps, N), where
         per-step row ``n`` is Fⁿ⁺¹.  ``load0`` is F(0) for the consistent
         initial acceleration; defaults to ``loads`` when static and to
         ``loads[0]`` when per-step (one Δt off — pass ``load0`` explicitly
-        for rapidly varying forcing)."""
+        for rapidly varying forcing).
+
+        ``return_info=True`` appends a per-step
+        :class:`~repro.core.solvers.SolveInfo` with ``(n_steps,)`` leaves
+        (stop-gradient — gradients through the trajectory are unchanged)."""
         v0 = jnp.zeros_like(u0) if v0 is None else v0
         loads = None if loads is None else jnp.asarray(loads)
         scan_loads = loads is not None and loads.ndim == 2
@@ -115,11 +125,22 @@ class NewmarkIntegrator:
         def body(carry, x):
             u, v, a = carry
             f = x if scan_loads else loads
+            if return_info:
+                u, v, a, info = self.step(u, v, a, load=f, return_info=True)
+                return (u, v, a), (u, v, info)
             u, v, a = self.step(u, v, a, load=f)
             return (u, v, a), (u, v)
 
-        _, (u_traj, v_traj) = segmented_scan(
+        _, ys = segmented_scan(
             body, (u0, v0, a0), loads if scan_loads else None,
             n_steps, checkpoint_every,
         )
+        if return_info:
+            u_traj, v_traj, info = ys
+            events.check_convergence(info, where="newmark.rollout")
+            events.record_solve("newmark.rollout", info, method=self.solver,
+                                backend=self.backend)
+            out = (u_traj, v_traj) if return_velocity else u_traj
+            return out, info
+        u_traj, v_traj = ys
         return (u_traj, v_traj) if return_velocity else u_traj

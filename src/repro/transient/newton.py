@@ -32,8 +32,9 @@ import jax.numpy as jnp
 from ..core import weakform as wf
 from ..core.assembly import GalerkinAssembler
 from ..core.boundary import DirichletCondenser
-from ..core.solvers import sparse_solve
+from ..core.solvers import SolveInfo, sparse_solve
 from ..core.sparse import CSR
+from ..telemetry import events
 from .stepping import axpy_csr, segmented_scan
 
 __all__ = ["NewtonKrylovIntegrator"]
@@ -85,29 +86,58 @@ class NewtonKrylovIntegrator:
         jac = dataclasses.replace(self.lin_op, vals=self.lin_op.vals + jac_vals)
         return jac if self.bc is None else self.bc.apply_matrix_only(jac)
 
-    def step(self, u_prev):
-        """One backward-Euler step: ``newton_iters`` Newton updates."""
+    def step(self, u_prev, return_info=False):
+        """One backward-Euler step: ``newton_iters`` Newton updates.
+
+        ``return_info=True`` additionally returns a
+        :class:`~repro.core.solvers.SolveInfo` aggregated over the inner
+        Newton iterations: total Krylov iterations, the last iteration's
+        residual, and all-iterations-converged (stop-gradient leaves)."""
 
         def newton(u, _):
             res = self.residual(u_prev, u)
             jac = self._jacobian(u)
-            du = sparse_solve(
-                jac, res, self.solver, self.tol, self.tol, self.maxiter
+            out = sparse_solve(
+                jac, res, self.solver, self.tol, self.tol, self.maxiter,
+                return_info=return_info,
             )
-            return u - du, None
+            du, info = out if return_info else (out, None)
+            return u - du, info
 
-        u, _ = jax.lax.scan(newton, u_prev, None, length=self.newton_iters)
+        u, infos = jax.lax.scan(newton, u_prev, None, length=self.newton_iters)
         if self.bc is not None:
             u = u * self.bc.free_mask + u_prev * (1.0 - self.bc.free_mask)
+        if return_info:
+            # (newton_iters,) leaves → one per-step summary
+            step_info = SolveInfo(
+                iters=infos.iters.sum(),
+                residual=infos.residual[-1],
+                converged=infos.converged.all(),
+            )
+            return u, step_info
         return u
 
     def rollout(self, u0, n_steps: int, *,
-                checkpoint_every: int | None = None) -> jnp.ndarray:
-        """Scan ``n_steps`` implicit steps; returns ``(n_steps, N)``."""
+                checkpoint_every: int | None = None,
+                return_info: bool = False) -> jnp.ndarray:
+        """Scan ``n_steps`` implicit steps; returns ``(n_steps, N)``.
+
+        ``return_info=True`` returns ``(traj, info)`` with per-step
+        ``(n_steps,)`` :class:`~repro.core.solvers.SolveInfo` leaves (each
+        step's inner Newton iterations aggregated — see :meth:`step`)."""
 
         def body(u, _):
+            if return_info:
+                u_new, info = self.step(u, return_info=True)
+                return u_new, (u_new, info)
             u_new = self.step(u)
             return u_new, u_new
 
-        _, traj = segmented_scan(body, u0, None, n_steps, checkpoint_every)
-        return traj
+        _, out = segmented_scan(body, u0, None, n_steps, checkpoint_every)
+        if return_info:
+            traj, info = out
+            events.check_convergence(info, where="newton.rollout")
+            events.record_solve("newton.rollout", info, method=self.solver,
+                                backend="csr")
+            return traj, info
+        return out

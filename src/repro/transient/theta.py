@@ -25,12 +25,14 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax
 import jax.numpy as jnp
 
 from ..core.boundary import DirichletCondenser
 from ..core.matvec import make_matvec
 from ..core.solvers import cg, jacobi_preconditioner, matfree_solve, sparse_solve
 from ..core.sparse import CSR
+from ..telemetry import events
 from .stepping import axpy_csr, segmented_scan
 
 __all__ = ["ThetaIntegrator", "BACKWARD_EULER", "CRANK_NICOLSON"]
@@ -132,10 +134,14 @@ class ThetaIntegrator:
                    lhs_full=lhs, rhs_op=rhs, **kw)
 
     # -- one step --------------------------------------------------------------
-    def step(self, u, load=None, bc_values=None):
+    def step(self, u, load=None, bc_values=None, return_info=False):
         """Advance uⁿ → uⁿ⁺¹.  ``load`` is the assembled Fⁿ⁺ᶿ (already the
         θ-weighted quadrature of F if time-varying); ``bc_values`` the
-        Dirichlet data at tⁿ⁺¹ (scalar, (n_bc,), or full field)."""
+        Dirichlet data at tⁿ⁺¹ (scalar, (n_bc,), or full field).
+
+        ``return_info=True`` additionally returns the step's
+        :class:`~repro.core.solvers.SolveInfo` as a non-differentiated
+        auxiliary output (stop-gradient leaves)."""
         if self.backend in ("csr", "matfree"):
             b = self.rhs_op.matvec(u)
         else:
@@ -153,26 +159,37 @@ class ThetaIntegrator:
             b = self.bc.lift(self.lhs_full, b, bc_values)
         if self.backend == "csr":
             return sparse_solve(
-                self.lhs, b, self.solver, self.tol, self.tol, self.maxiter
+                self.lhs, b, self.solver, self.tol, self.tol, self.maxiter,
+                return_info=return_info,
             )
         if self.backend == "matfree":
             # differentiable adjoint solve on the matrix-free operator
             return matfree_solve(
-                self.lhs, b, self.solver, self.tol, self.tol, self.maxiter
+                self.lhs, b, self.solver, self.tol, self.tol, self.maxiter,
+                return_info=return_info,
             )
-        u_new, _ = cg(self._lhs_mv, b, x0=u, tol=self.tol, atol=self.tol,
-                      maxiter=self.maxiter, m=self._precond)
+        u_new, info = cg(self._lhs_mv, b, x0=u, tol=self.tol, atol=self.tol,
+                         maxiter=self.maxiter, m=self._precond)
+        if return_info:
+            return u_new, jax.lax.stop_gradient(info)
         return u_new
 
     # -- rollout ---------------------------------------------------------------
     def rollout(self, u0, n_steps: int, *, loads=None, bc_values=None,
-                checkpoint_every: int | None = None) -> jnp.ndarray:
+                checkpoint_every: int | None = None,
+                return_info: bool = False) -> jnp.ndarray:
         """Scan ``n_steps`` steps from ``u0``; returns ``(n_steps, N)``
         (u0 excluded, matching the reference-integrator convention).
 
         ``loads``: None | (N,) static | (n_steps, N) per-step.
         ``bc_values``: None | scalar | (n_bc,) static | (n_steps, n_bc)
         per-step (time-varying Dirichlet data, evaluated at tⁿ⁺¹).
+
+        ``return_info=True`` returns ``(traj, info)`` where ``info`` is a
+        :class:`~repro.core.solvers.SolveInfo` with per-step ``(n_steps,)``
+        leaves stacked out of the scan — the iteration-count trajectory of
+        the rollout.  The leaves carry stop-gradients, so gradients through
+        ``traj`` are unchanged.
         """
         loads = None if loads is None else jnp.asarray(loads)
         bcv = None if bc_values is None else jnp.asarray(bc_values)
@@ -203,9 +220,19 @@ class ThetaIntegrator:
         def body(u, x):
             f = x["f"] if scan_loads else loads
             g = x["g"] if scan_bcv else bcv
+            if return_info:
+                u_new, info = self.step(u, load=f, bc_values=g,
+                                        return_info=True)
+                return u_new, (u_new, info)
             u_new = self.step(u, load=f, bc_values=g)
             return u_new, u_new
 
         # u0 is taken as-is: with Dirichlet data it must satisfy u0[bc] = g(t0)
-        _, traj = segmented_scan(body, u0, xs or None, n_steps, checkpoint_every)
-        return traj
+        _, out = segmented_scan(body, u0, xs or None, n_steps, checkpoint_every)
+        if return_info:
+            traj, info = out
+            events.check_convergence(info, where="theta.rollout")
+            events.record_solve("theta.rollout", info, method=self.solver,
+                                backend=self.backend)
+            return traj, info
+        return out

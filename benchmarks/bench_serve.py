@@ -1,0 +1,133 @@
+"""repro.serve admission-batching economics + latency SLO rows.
+
+Three measurements on the canonical heterogeneous-coefficient Poisson
+workload (one shared plan, per-request per-element ρ):
+
+* ``serve_sequential_solve_n*`` — B warm sequential ``PoissonProblem
+  .solve(rho=ρ_i)`` calls (the pre-serve dispatch cost, compile excluded),
+* ``serve_batched_solve_n*`` — the same B requests admitted through a
+  warmed-up :class:`~repro.serve.service.SolveService` and answered by ONE
+  vmapped executable; the derived field carries the speedup (the ≥3x
+  acceptance gate — asserted here, so CI fails loudly on regression),
+* ``serve_e2e_p99_us_n*`` / ``serve_e2e_p50_us_n*`` — open-loop latency
+  percentiles out of the telemetry histograms under Poisson arrivals
+  (the p99 row is baseline-gated by ``benchmarks/compare.py``), plus
+  ``serve_cache_hit_rate`` — must be 1.0 across the post-warmup waves
+  (asserted, together with zero ``jit_traces{kind=serve}`` retraces).
+"""
+
+import time
+
+import numpy as np
+
+from repro import serve, telemetry
+from repro.fem import PoissonProblem
+
+from .common import emit_json, is_quick, time_fn
+
+
+def main():
+    quick = is_quick()
+    b = 16
+    resolution = 10 if quick else 16
+    waves = 3
+    rate = 4000.0
+
+    reqs = serve.poisson_requests(n_requests=b, resolution=resolution)
+    plan = reqs[0].plan
+    n = plan.static.num_dofs
+    n_elems = plan.static.scalar_cell_dofs.shape[0]
+    rng = np.random.default_rng(7)
+    rhos = rng.uniform(0.5, 2.0, size=(b, n_elems))
+
+    # -- sequential reference: B warm .solve() dispatches -------------------
+    prob = PoissonProblem(_mesh(resolution))
+    prob.solve(rho=rhos[0])  # compile once (cold-cache excluded)
+
+    def sequential():
+        return [prob.solve(rho=rhos[i]).u for i in range(b)]
+
+    t_seq = time_fn(sequential, warmup=1, iters=3)
+    emit_json(
+        f"serve_sequential_solve_n{n}", t_seq,
+        f"B={b};dofs={n};per_req={t_seq / b:.0f}us",
+        dofs=n, batch=b, us_per_request=round(t_seq / b, 1),
+    )
+
+    # -- batched service path: same B requests, one executable --------------
+    telemetry.enable()
+    svc = serve.SolveService(window=0.0)
+    svc.warmup(reqs[0], batch_sizes=(b,))
+
+    def serve_wave(seed=0):
+        wave = serve.poisson_requests(n_requests=b, resolution=resolution,
+                                      seed=seed)
+        pend = [svc.submit(r) for r in wave]
+        svc.drain()
+        return [p.result() for p in pend]
+
+    serve_wave()  # warm the dispatch path itself
+    base_traces = telemetry.jit_trace_total("serve")
+    hits0, miss0 = svc.cache.hits, svc.cache.misses
+    t_batch = time_fn(serve_wave, warmup=0, iters=3)
+    retraces = telemetry.jit_trace_total("serve") - base_traces
+    assert retraces == 0, f"serve waves retraced {retraces}x after warmup"
+    assert svc.cache.misses == miss0, "executable cache missed after warmup"
+    hit_rate = (svc.cache.hits - hits0) / max(1, (svc.cache.hits - hits0)
+                                              + (svc.cache.misses - miss0))
+    speedup = t_seq / t_batch
+    emit_json(
+        f"serve_batched_solve_n{n}", t_batch,
+        f"B={b};speedup={speedup:.1f}x;per_req={t_batch / b:.0f}us",
+        dofs=n, batch=b, speedup_vs_sequential=round(speedup, 2),
+        us_per_request=round(t_batch / b, 1),
+    )
+    emit_json(
+        "serve_cache_hit_rate", 1e6 * hit_rate,  # rate as a pseudo-time row
+        f"hit_rate={hit_rate:.2f};retraces={retraces}",
+        hit_rate=hit_rate, retraces=retraces,
+    )
+    assert speedup >= 3.0, (
+        f"admission batching speedup {speedup:.2f}x < 3x acceptance floor")
+    assert hit_rate == 1.0, f"cache hit rate {hit_rate:.2f} != 1.0 after warmup"
+
+    # -- open-loop latency SLO rows ----------------------------------------
+    telemetry.reset()
+    with serve.SolveService(window=0.002) as live:
+        live.warmup(reqs[0], batch_sizes=(1, 2, 4, 8, 16))
+        t0 = time.monotonic()
+        reports = [
+            serve.open_loop_load(
+                live,
+                serve.poisson_requests(n_requests=b, resolution=resolution,
+                                       seed=100 + w),
+                rate=rate, seed=w)
+            for w in range(waves)
+        ]
+        wall = time.monotonic() - t0
+    rep = reports[-1]  # cumulative histograms: last report sees all waves
+    ok = sum(r.ok for r in reports)
+    assert ok == waves * b, f"only {ok}/{waves * b} open-loop requests ok"
+    emit_json(
+        f"serve_e2e_p50_us_n{n}", rep.e2e_p50_us,
+        f"waves={waves};B={b};rate={rate:.0f}/s",
+        dofs=n, batch=b, waves=waves, offered_rate=rate,
+        queue_wait_p50_us=rep.queue_wait_p50_us,
+    )
+    emit_json(
+        f"serve_e2e_p99_us_n{n}", rep.e2e_p99_us,
+        f"waves={waves};B={b};rate={rate:.0f}/s;"
+        f"throughput={ok / wall:.0f}/s",
+        dofs=n, batch=b, waves=waves, offered_rate=rate,
+        throughput=round(ok / wall, 1),
+    )
+
+
+def _mesh(resolution: int):
+    from repro.core import unit_square_tri
+
+    return unit_square_tri(resolution)
+
+
+if __name__ == "__main__":
+    main()

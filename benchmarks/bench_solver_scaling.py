@@ -9,11 +9,12 @@ import numpy as np
 from repro.core import hollow_cube_tet, unit_cube_tet
 from repro.fem import ElasticityProblem, PoissonProblem
 
-from .common import emit, emit_json, time_fn
+from .common import emit, emit_json, is_quick, time_fn
 
 
 def main():
-    for n in (6, 10, 14):
+    quick = is_quick()
+    for n in (4, 6) if quick else (6, 10, 14):
         prob = PoissonProblem(unit_cube_tet(n))
         res, info = prob.solve(return_info=True)  # warm compile
         t = time_fn(lambda: prob.solve(tol=1e-10).u, warmup=0, iters=3)
@@ -32,7 +33,7 @@ def main():
         t_sp = time_fn(lambda: spla.spsolve(ks, np.asarray(f)), warmup=0, iters=2)
         emit(f"poisson3d_scipy_n{prob.space.num_dofs}", t_sp, "baseline=scipy_spsolve")
 
-    for n in (4, 8):
+    for n in (3,) if quick else (4, 8):
         prob = ElasticityProblem(hollow_cube_tet(n))
         res, info = prob.solve(return_info=True)
         t = time_fn(lambda: prob.solve(tol=1e-10).u, warmup=0, iters=2)

@@ -58,8 +58,15 @@ def _median(xs: list[float]) -> float:
 
 
 def compare(results: dict[str, dict], baseline: dict[str, dict],
-            tolerance: float, normalize: bool = True) -> list[str]:
+            tolerance: float, normalize: bool = True,
+            subset: bool = False) -> list[str]:
     failures = []
+    if subset:
+        skipped = sorted(set(baseline) - set(results))
+        baseline = {k: v for k, v in baseline.items() if k in results}
+        if skipped:
+            print(f"subset mode: {len(skipped)} tracked rows not in this "
+                  f"run (skipped): {', '.join(skipped)}")
     ratios = {
         name: results[name]["us_per_call"] / base["us_per_call"]
         for name, base in baseline.items()
@@ -119,6 +126,12 @@ def main(argv=None) -> int:
         help="gate raw ratios (same-machine baseline) instead of "
              "median-normalized ones",
     )
+    ap.add_argument(
+        "--subset", action="store_true",
+        help="gate only the baseline rows present in the results (for CI "
+             "jobs that run a subset of the benchmark modules); missing "
+             "tracked rows are skipped instead of failing",
+    )
     args = ap.parse_args(argv)
 
     results = load_rows(args.results)
@@ -133,14 +146,16 @@ def main(argv=None) -> int:
         print(f"no baseline at {args.baseline}; run with --update-baseline first",
               file=sys.stderr)
         return 2
-    failures = compare(results, load_rows(args.baseline), args.tolerance,
-                       normalize=not args.no_normalize)
+    baseline = load_rows(args.baseline)
+    failures = compare(results, baseline, args.tolerance,
+                       normalize=not args.no_normalize, subset=args.subset)
     if failures:
         print("\nPERF REGRESSION:", file=sys.stderr)
         for fail in failures:
             print(f"  {fail}", file=sys.stderr)
         return 1
-    print(f"\nall {len(load_rows(args.baseline))} tracked rows within "
+    gated = len(set(baseline) & set(results)) if args.subset else len(baseline)
+    print(f"\nall {gated} tracked rows within "
           f"{args.tolerance:g}x of baseline")
     return 0
 

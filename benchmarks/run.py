@@ -14,16 +14,19 @@ Prints ``name,us_per_call,derived`` CSV rows.  Module → paper artifact map:
   bench_weakform           — fused multi-term WeakForm assemble vs separate+add
   bench_batched_assembly   — vmap-batched multi-instance assembly vs B singles
   bench_matfree            — matrix-free apply/solve vs assembled CSR
+  bench_serve              — repro.serve admission batching vs sequential
   bench_dryrun_roofline    — harness roofline table (from dry-run JSON)
 
 Usage:
-  python -m benchmarks.run [--only PREFIX] [--quick]
+  python -m benchmarks.run [--only PREFIX[,PREFIX...]] [--quick]
 
 ``--only matfree`` runs just the modules whose name contains the prefix
-(``bench_`` is implied); ``--quick`` switches modules to their reduced
-problem sizes (the perf-smoke CI subset).  ``BENCH_JSON=<path>`` appends
-machine-readable JSON-lines rows (compared against the committed
-``benchmarks/BENCH_baseline.json`` by ``benchmarks/compare.py``).
+(``bench_`` is implied); a comma-separated list (``--only matfree,serve``)
+runs every module matching any prefix.  ``--quick`` switches modules to
+their reduced problem sizes (the perf-smoke CI subset).
+``BENCH_JSON=<path>`` appends machine-readable JSON-lines rows (compared
+against the committed ``benchmarks/BENCH_baseline.json`` by
+``benchmarks/compare.py``).
 """
 
 import argparse
@@ -35,8 +38,9 @@ import traceback
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__.split("Usage:")[0])
     ap.add_argument(
-        "--only", default=None, metavar="PREFIX",
-        help="run only modules whose name contains PREFIX (bench_ implied)",
+        "--only", default=None, metavar="PREFIX[,PREFIX...]",
+        help="run only modules whose name contains any PREFIX "
+             "(bench_ implied; comma-separated)",
     )
     ap.add_argument(
         "--quick", action="store_true",
@@ -57,6 +61,7 @@ def main(argv=None) -> None:
         bench_mixed_bc,
         bench_neural_solvers,
         bench_operator_learning,
+        bench_serve,
         bench_solver_scaling,
         bench_topo_opt,
         bench_transient,
@@ -77,11 +82,13 @@ def main(argv=None) -> None:
         bench_weakform,
         bench_batched_assembly,
         bench_matfree,
+        bench_serve,
         bench_dryrun_roofline,
     ]
     if args.only:
-        needle = args.only.removeprefix("bench_")
-        modules = [m for m in modules if needle in m.__name__]
+        needles = [p.removeprefix("bench_") for p in args.only.split(",") if p]
+        modules = [m for m in modules
+                   if any(nd in m.__name__ for nd in needles)]
         if not modules:
             print(f"no benchmark module matches --only {args.only!r}", file=sys.stderr)
             sys.exit(2)

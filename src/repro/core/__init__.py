@@ -48,7 +48,9 @@ from .mesh import (  # noqa: E402,F401
 )
 from .operator import (  # noqa: E402,F401
     LinearOperator,
+    MatFreeFamily,
     MatFreeOperator,
+    matfree_family,
     matfree_operator,
     n_matfree_traces,
 )
@@ -57,6 +59,7 @@ from .solvers import (  # noqa: E402,F401
     cg,
     jacobi_preconditioner,
     matfree_solve,
+    matfree_solve_batched,
     sparse_solve,
     sparse_solve_batched,
 )

@@ -43,9 +43,11 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
+from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .. import telemetry
 from ..telemetry import annotate
@@ -56,7 +58,9 @@ from .sparse import _dev
 __all__ = [
     "LinearOperator",
     "MatFreeOperator",
+    "MatFreeFamily",
     "matfree_operator",
+    "matfree_family",
     "n_matfree_traces",
 ]
 
@@ -340,6 +344,31 @@ class MatFreeOperator(LinearOperator):
             diag = m * diag + (1.0 - m)
         return diag
 
+    def in_axes(self, leaf_axes=None, coords_ax=None, free_mask_ax=None,
+                k_local_ax=None, ctx_ax=None) -> "MatFreeOperator":
+        """An operator-shaped ``jax.vmap`` axes object for this pytree: the
+        same aux data (so tree structures match) with each traced child
+        replaced by its batch axis (``0``) or ``None`` (shared).
+
+        ``leaf_axes`` aligns with ``self.leaves`` (defaults to all-shared);
+        the other slots default to shared.  This is what lets a family of
+        operators with ``(B, ...)`` coefficient leaves vmap through
+        ``matvec`` / ``diagonal`` / :func:`~repro.core.solvers.matfree_solve`
+        without hand-building the pytree of axes.
+        """
+        if leaf_axes is None:
+            leaf_axes = (None,) * len(self.leaves)
+        if len(leaf_axes) != len(self.leaves):
+            raise ValueError(
+                f"leaf_axes has {len(leaf_axes)} entries but the operator "
+                f"carries {len(self.leaves)} traced leaves"
+            )
+        return MatFreeOperator(
+            coords=coords_ax, ctx=ctx_ax, k_local=k_local_ax,
+            leaves=tuple(leaf_axes), free_mask=free_mask_ax,
+            static=self.static, spec=self.spec, store=self.store,
+        )
+
     # -- introspection ----------------------------------------------------
     def state_bytes(self) -> int:
         """Bytes of traced state this operator carries *beyond* the plan —
@@ -416,3 +445,195 @@ def matfree_operator(plan: AssemblyPlan, form, store: str = "context",
         )
     telemetry.gauge_set("operator_state_bytes", op.state_bytes(), store=store)
     return op
+
+
+# ---------------------------------------------------------------------------
+# Batched families: B same-signature operators on ONE shared plan
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True, eq=False)
+class MatFreeFamily(LinearOperator):
+    """A *family* of B matrix-free operators sharing one plan and one form
+    signature — the matrix-free twin of :class:`~repro.core.sparse.BatchedCSR`.
+
+    ``op`` is a :class:`MatFreeOperator` whose batched coefficient leaves
+    carry a leading ``(B, ...)`` axis (slots listed in ``leaf_axes``); the
+    geometry, plan tables and Dirichlet mask are shared across the family.
+    Every method vmaps the single-operator apply with the right axes, so the
+    whole family runs in ONE executable:
+
+    * ``matvec(X)`` / ``rmatvec(X)`` — ``(B, n)`` (a ``(n,)`` input
+      broadcasts across the family),
+    * ``diagonal()`` — ``(B, n)`` diagonals (family Jacobi preconditioning),
+    * ``condensed(bc)`` — shared-mask Dirichlet condensation,
+    * ``family[i]`` — instance ``i`` as a plain :class:`MatFreeOperator`.
+
+    :func:`repro.core.solvers.matfree_solve_batched` solves the family with
+    one vmapped adjoint :func:`~repro.core.solvers.matfree_solve` — gradients
+    match per-instance adjoint solves.  Built by :func:`matfree_family`.
+    """
+
+    op: MatFreeOperator      # traced child: batched-leaf operator
+    batch: int               # aux: family size B
+    leaf_axes: tuple         # aux: per-leaf vmap axis (0 | None)
+    coords_ax: Any = None    # aux: coords batch axis (0 | None)
+    k_local_ax: Any = None   # aux: element-matrix batch axis (store="local")
+
+    # -- pytree ----------------------------------------------------------
+    def tree_flatten(self):
+        return (self.op,), (self.batch, self.leaf_axes, self.coords_ax,
+                            self.k_local_ax)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], *aux)
+
+    # -- structure --------------------------------------------------------
+    @property
+    def shape(self) -> tuple[int, int]:
+        return self.op.shape  # per-instance shape (like BatchedCSR)
+
+    def in_axes(self) -> MatFreeOperator:
+        """The operator-shaped ``vmap`` axes pytree of this family."""
+        return self.op.in_axes(leaf_axes=self.leaf_axes,
+                               coords_ax=self.coords_ax,
+                               k_local_ax=self.k_local_ax)
+
+    def __getitem__(self, b: int) -> MatFreeOperator:
+        if not isinstance(b, (int, np.integer)):
+            raise TypeError(
+                f"MatFreeFamily indices must be int, got {type(b).__name__}"
+            )
+        leaves = tuple(
+            leaf[b] if ax == 0 else leaf
+            for leaf, ax in zip(self.op.leaves, self.leaf_axes)
+        )
+        coords = self.op.coords
+        if self.coords_ax == 0 and coords is not None:
+            coords = coords[b]
+        k_local = self.op.k_local
+        if self.k_local_ax == 0 and k_local is not None:
+            k_local = k_local[b]
+        return dataclasses.replace(self.op, leaves=leaves, coords=coords,
+                                   k_local=k_local)
+
+    def condensed(self, bc) -> "MatFreeFamily":
+        """Shared-mask Dirichlet condensation of the whole family (the mask
+        broadcasts — one ``(n,)`` mask for all B instances)."""
+        return dataclasses.replace(self, op=self.op.condensed(bc))
+
+    # -- vmapped applies ---------------------------------------------------
+    def _vmap(self, fn, x=None):
+        ax = self.in_axes()
+        if x is None:
+            return jax.vmap(fn, in_axes=(ax,))(self.op)
+        in_x = None if jnp.ndim(x) == 1 else 0
+        return jax.vmap(fn, in_axes=(ax, in_x))(self.op, x)
+
+    def matvec(self, x: jnp.ndarray) -> jnp.ndarray:
+        """``Y_b = A_b @ x_b`` for ``x: (B, n)`` (``(n,)`` broadcasts)."""
+        return self._vmap(lambda o, xi: o.matvec(xi), x)
+
+    def rmatvec(self, x: jnp.ndarray) -> jnp.ndarray:
+        return self._vmap(lambda o, xi: o.rmatvec(xi), x)
+
+    def diagonal(self) -> jnp.ndarray:
+        """Per-instance diagonals ``(B, n)`` by one vmapped diagonal-only
+        assembly — the family Jacobi preconditioner input."""
+        return self._vmap(lambda o: o.diagonal())
+
+    def state_bytes(self) -> int:
+        return self.op.state_bytes()
+
+
+def matfree_family(plan: AssemblyPlan, form, leaves_batch=None,
+                   store: str = "context", coords_batch=None) -> MatFreeFamily:
+    """Build a batched matrix-free operator family on one shared plan.
+
+    ``form`` is the template form; ``leaves_batch`` batches its traced
+    leaves with the same conventions as
+    :func:`~repro.core.assembly.assemble_batched` — a tuple aligned with the
+    form's traced leaves in slot order (per term: coefficients, then the
+    scale factor), each entry ``None`` (shared) or an array with a leading
+    ``(B, ...)`` batch axis; a bare array batches the first slot::
+
+        fam = matfree_family(plan, wf.diffusion(rho_b[0]),
+                             leaves_batch=(rho_b, None))     # (B, E) coeffs
+
+    ``coords_batch: (B, E, nv, d)`` batches the geometry instead of (or in
+    addition to) the coefficients; batched geometry forces ``store="coords"``
+    (per-apply geometry recompute — the precomputed-context layout would
+    have to materialize B full contexts).
+    """
+    spec, leaves0 = weakform.lower(form, weakform.MATRIX)
+    if any(domain is not None for _, domain, _ in spec):
+        raise NotImplementedError(
+            "matrix-free families support volume terms only (same restriction "
+            "as the single-instance matrix-free apply)"
+        )
+    if leaves_batch is None:
+        leaves_batch = (None,) * len(leaves0)
+    elif not isinstance(leaves_batch, (tuple, list)):
+        leaves_batch = (leaves_batch,) + (None,) * (len(leaves0) - 1)
+    if len(leaves_batch) != len(leaves0):
+        raise ValueError(
+            f"leaves_batch has {len(leaves_batch)} slots but the form lowers "
+            f"to {len(leaves0)} traced leaves (per term: coefficients, then "
+            "the scale factor) — pass None for slots shared across the family"
+        )
+    sizes = {int(jnp.shape(b)[0]) for b in leaves_batch if b is not None}
+    if coords_batch is not None:
+        sizes.add(int(jnp.shape(coords_batch)[0]))
+        if store != "coords":
+            store = "coords"
+    if not sizes:
+        raise ValueError(
+            "nothing is batched: pass coords_batch and/or batched leaves"
+        )
+    if len(sizes) > 1:
+        raise ValueError(f"inconsistent family batch sizes {sorted(sizes)}")
+    (batch,) = sizes
+    merged = tuple(
+        b if b is not None else l0 for b, l0 in zip(leaves_batch, leaves0)
+    )
+    leaf_axes = tuple(0 if b is not None else None for b in leaves_batch)
+    coords_ax = 0 if coords_batch is not None else None
+
+    if store == "local":
+        # per-instance element matrices, built by one vmapped local assembly:
+        # k_local becomes the only (batched) traced leaf, like the
+        # single-instance "local" store
+        base = matfree_operator(plan, form, store="context")
+        ctx, vs = base.ctx, plan.static.value_size
+
+        def k_of(lv):
+            k_local = None
+            leaf = iter(lv)
+            for kind, _, desc in spec:
+                vals = [next(leaf) if d == weakform.TRACED else d[1]
+                        for d in desc]
+                *coeffs, scale = vals
+                k = weakform.KERNELS[kind].fn(ctx, vs, *coeffs)
+                k = k * jnp.asarray(scale)
+                k_local = k if k_local is None else k_local + k
+            return k_local
+
+        k_b = jax.vmap(k_of, in_axes=(leaf_axes,))(merged)
+        op = dataclasses.replace(
+            base, k_local=k_b, ctx=None, coords=None, leaves=(),
+            spec=tuple((kind, None, ()) for kind, _, _ in spec),
+            store="local",
+        )
+        return MatFreeFamily(op=op, batch=batch, leaf_axes=(),
+                             coords_ax=None, k_local_ax=0)
+    coords = plan.coords if coords_batch is None else coords_batch
+    op = matfree_operator(plan, form, store=store,
+                          coords=coords if coords_ax is None else None)
+    if coords_ax == 0:
+        op = dataclasses.replace(op, coords=coords)
+    op = dataclasses.replace(op, leaves=merged)
+    telemetry.gauge_set("operator_state_bytes", op.state_bytes(),
+                        store=f"family_{store}")
+    return MatFreeFamily(op=op, batch=batch, leaf_axes=leaf_axes,
+                         coords_ax=coords_ax)

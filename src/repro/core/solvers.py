@@ -52,6 +52,7 @@ __all__ = [
     "sparse_solve",
     "sparse_solve_batched",
     "matfree_solve",
+    "matfree_solve_batched",
     "SolveInfo",
 ]
 
@@ -296,6 +297,35 @@ def matfree_solve(op, b, method="cg", tol=1e-10, atol=1e-10,
     if return_info:
         x, info = out
         events.record_solve("matfree_solve", info, method=method,
+                            backend="matfree")
+        return x, info
+    return out
+
+
+def matfree_solve_batched(family, b, method="cg", tol=1e-10, atol=1e-10,
+                          maxiter=10000, precond="jacobi", return_info=False):
+    """``X_b = A_b⁻¹ b_b`` over a matrix-free
+    :class:`~repro.core.operator.MatFreeFamily` — one ``vmap`` of the
+    differentiable :func:`matfree_solve` with the family's leaf axes, so the
+    B Krylov solves (and their adjoint solves under ``grad``) share a single
+    executable on one plan/signature, with zero matrix materialization.
+
+    ``b`` is ``(B, n)`` per-instance or ``(n,)`` shared; returns ``(B, n)``
+    (plus a ``SolveInfo`` with ``(B,)`` leaves under ``return_info=True``).
+    Gradients w.r.t. the batched coefficient leaves match B per-instance
+    adjoint :func:`matfree_solve` calls.
+    """
+    b = jnp.asarray(b)
+    in_b = None if b.ndim == 1 else 0
+    out = jax.vmap(
+        lambda op, bi: _matfree_solve(
+            op, bi, method, tol, atol, maxiter, precond, bool(return_info)
+        ),
+        in_axes=(family.in_axes(), in_b),
+    )(family.op, b)
+    if return_info:
+        x, info = out
+        events.record_solve("matfree_solve_batched", info, method=method,
                             backend="matfree")
         return x, info
     return out

@@ -1,99 +1,125 @@
-"""Serving driver: prefill a batch of prompts, then autoregressive decode.
+"""Serving driver: run the :mod:`repro.serve` solve service under a
+synthetic open-loop load.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --smoke \
-        --prompt-len 32 --gen 16 --batch 4
+    PYTHONPATH=src python -m repro.launch.serve --smoke
+    PYTHONPATH=src python -m repro.launch.serve --requests 64 --rate 500 \
+        --resolution 24 --backend matfree --window-ms 5
 
-Exercises the exact code path the decode_32k / long_500k dry-run cells
-lower: bf16 served weights, donated KV cache (in-place update), greedy
-sampling.  On a pod the mesh axes change; nothing else does.
+Builds the canonical heterogeneous-coefficient Poisson workload on one
+shared plan (:func:`repro.serve.poisson_requests`), warms up and pins the
+executable cache for the expected batch buckets, then drives the
+:class:`~repro.serve.service.SolveService` with Poisson arrivals at the
+offered ``--rate``.  Latency percentiles, queue waits, batch sizes and
+executable-cache hit rates all come out of :mod:`repro.telemetry`
+(``--jsonl`` streams the metric rows in ``BENCH_JSON`` format).
+
+``--smoke`` is the CI path: a tiny mesh, two waves, hard assertions that
+every request is answered ``ok``, results match a sequential reference
+solve, and the second wave retraces nothing.
 """
 
 from __future__ import annotations
 
 import argparse
-import time
+import sys
 
-import jax
 import jax.numpy as jnp
-import numpy as np
-
-from ..configs import ARCHS, smoke_variant
-from ..models.layers import init_params, is_spec, P
-from ..models.model_zoo import build_model
-from ..sharding.partitioning import RULES_SINGLE_POD, make_shardings, use_rules
-from .mesh import make_host_mesh
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-4b")
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--data-axis", type=int, default=1)
-    ap.add_argument("--model-axis", type=int, default=1)
+def _run_smoke() -> int:
+    from .. import serve, telemetry
+    from ..core import assemble, sparse_solve
+
+    telemetry.enable()
+    svc = serve.SolveService(window=0.002)
+    reqs = serve.poisson_requests(n_requests=6, resolution=8)
+    # a wave may split across admission windows → warm every bucket ≤ 8
+    svc.warmup(reqs[0], batch_sizes=(1, 2, 4, 8))
+    base_traces = telemetry.jit_trace_total("serve")
+
+    with svc:
+        report = serve.open_loop_load(svc, reqs, rate=2000.0)
+        report2 = serve.open_loop_load(
+            svc, serve.poisson_requests(n_requests=6, resolution=8, seed=1),
+            rate=2000.0)
+    assert report.ok == 6 and report2.ok == 6, (report, report2)
+    retraces = telemetry.jit_trace_total("serve") - base_traces
+    assert retraces == 0, f"warmup did not cover the smoke waves: {retraces}"
+
+    # answer correctness vs one sequential reference solve
+    rq = reqs[0]
+    k = rq.bc.apply_matrix_only(assemble(rq.plan, rq.form))
+    u_ref = sparse_solve(k, rq.rhs * rq.bc.free_mask, rq.method,
+                         rq.tol, rq.tol, rq.maxiter)
+    pend = svc.submit(rq)
+    svc.drain()
+    err = float(jnp.max(jnp.abs(pend.result() - u_ref)))
+    assert err < 1e-12, f"served answer diverges from reference: {err:.3e}"
+
+    print(f"serve smoke OK: {report.ok + report2.ok + 1} requests, "
+          f"0 retraces after warmup, parity {err:.1e}, "
+          f"e2e p99 {report2.e2e_p99_us:.0f}us")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI run with hard correctness assertions")
+    ap.add_argument("--requests", type=int, default=32,
+                    help="requests per wave")
+    ap.add_argument("--waves", type=int, default=3)
+    ap.add_argument("--rate", type=float, default=500.0,
+                    help="offered load [requests/s], Poisson arrivals")
+    ap.add_argument("--resolution", type=int, default=16,
+                    help="unit-square mesh resolution")
+    ap.add_argument("--backend", default="csr", choices=("csr", "matfree"))
+    ap.add_argument("--window-ms", type=float, default=2.0,
+                    help="admission batching window")
+    ap.add_argument("--max-batch", type=int, default=64)
+    ap.add_argument("--queue-limit", type=int, default=1024)
+    ap.add_argument("--timeout", type=float, default=None,
+                    help="per-request admission deadline [s]")
+    ap.add_argument("--jsonl", default=None,
+                    help="append telemetry metric rows (BENCH_JSON) here")
     args = ap.parse_args(argv)
 
-    cfg = ARCHS[args.arch]
     if args.smoke:
-        cfg = smoke_variant(cfg)
-    model = build_model(cfg, tp_degree=args.model_axis)
-    mesh = make_host_mesh(args.data_axis, args.model_axis)
-    rules = RULES_SINGLE_POD
-    max_len = args.prompt_len + args.gen
+        return _run_smoke()
 
-    rng = np.random.default_rng(0)
-    tokens = jnp.asarray(
-        rng.integers(0, cfg.vocab_size, size=(args.batch, args.prompt_len)),
-        jnp.int32,
-    )
-    batch = {"tokens": tokens}
-    if cfg.frontend == "audio_frames":
-        batch["audio_embeds"] = jnp.asarray(
-            rng.normal(size=(args.batch, 100, cfg.d_model)), jnp.float32
-        )
-    elif cfg.frontend == "patch_embed":
-        batch["vision_embeds"] = jnp.asarray(
-            rng.normal(size=(args.batch, cfg.num_frontend_tokens, cfg.d_model)),
-            jnp.float32,
-        )
+    from .. import serve, telemetry
 
-    with mesh:
-        params = init_params(model.param_specs(), jax.random.PRNGKey(0))
-        params = jax.tree.map(lambda x: x.astype(jnp.bfloat16)
-                              if x.dtype == jnp.float32 else x, params)
+    telemetry.enable(jsonl=args.jsonl)
+    svc = serve.SolveService(window=args.window_ms * 1e-3,
+                             max_batch=args.max_batch,
+                             queue_limit=args.queue_limit)
+    template = serve.poisson_requests(
+        n_requests=1, resolution=args.resolution, backend=args.backend)[0]
+    top = min(serve.pad_bucket(args.requests), args.max_batch)
+    buckets = sorted({min(1 << i, top) for i in range(top.bit_length())})
+    print(f"warmup: buckets {buckets} on resolution {args.resolution} "
+          f"({args.backend})")
+    svc.warmup(template, batch_sizes=buckets)
 
-        with use_rules(rules):
-            t0 = time.perf_counter()
-            logits, cache = model.prefill(params, batch, max_len)
-            jax.block_until_ready(logits)
-            t_prefill = time.perf_counter() - t0
-            print(f"prefill {args.batch}×{args.prompt_len}: {t_prefill*1e3:.0f} ms")
-
-            decode = jax.jit(model.decode, donate_argnums=(2,))
-            tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-            out_tokens = [np.asarray(tok)]
-            t0 = time.perf_counter()
-            for step in range(args.gen - 1):
-                dbatch = {
-                    "tokens": tok,
-                    "cache_len": jnp.asarray(args.prompt_len + step, jnp.int32),
-                }
-                logits, cache = decode(params, dbatch, cache)
-                tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-                out_tokens.append(np.asarray(tok))
-            jax.block_until_ready(tok)
-            dt = time.perf_counter() - t0
-            print(
-                f"decode {args.gen - 1} steps: {dt*1e3:.0f} ms "
-                f"({dt / max(args.gen - 1, 1) * 1e3:.1f} ms/tok)"
-            )
-            gen = np.concatenate(out_tokens, axis=1)
-            print("generated token ids (first row):", gen[0][:16])
-            assert np.all(gen < cfg.vocab_size)
-    return gen
+    with svc:
+        for wave in range(args.waves):
+            reqs = serve.poisson_requests(
+                n_requests=args.requests, resolution=args.resolution,
+                backend=args.backend, timeout=args.timeout, seed=wave)
+            report = serve.open_loop_load(svc, reqs, rate=args.rate,
+                                          seed=wave)
+            print(f"wave {wave}: ok={report.ok} shed={report.shed} "
+                  f"expired={report.expired} "
+                  f"p50={report.e2e_p50_us:.0f}us "
+                  f"p99={report.e2e_p99_us:.0f}us "
+                  f"batch≈{report.batch_size_mean:.1f} "
+                  f"hit-rate={report.cache_hit_rate:.2f} "
+                  f"throughput={report.throughput:.0f}/s")
+    if args.jsonl:
+        rows = telemetry.export_jsonl(args.jsonl)
+        print(f"exported {len(rows)} metric rows to {args.jsonl}")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -30,7 +30,9 @@ from ..core import (
     assemble_rhs,
     assemble_rhs_batched,
     make_residual,
+    matfree_family,
     matfree_operator,
+    matfree_solve_batched,
     sparse_solve_batched,
     weakform as wf,
 )
@@ -171,16 +173,34 @@ class BatchedGalerkinResidualLoss:
     Galerkin residual over the family — one vmapped SpMV, one executable,
     zero AD passes through space.  Homogeneous Dirichlet BCs (hard
     constraints via condensation, matching :class:`GalerkinResidualLoss`).
+
+    ``backend="matfree"`` keeps the whole family matrix-free: the per-sample
+    operators are one :class:`~repro.core.operator.MatFreeFamily` on the
+    shared plan — residuals are vmapped fused element actions and
+    :meth:`solve` goes through
+    :func:`~repro.core.solvers.matfree_solve_batched`, with zero CSR values
+    for the B instances.
     """
 
     def __init__(self, asm: GalerkinAssembler, bc: DirichletCondenser,
-                 rho_batch, f=1.0, f_batch=None):
+                 rho_batch, f=1.0, f_batch=None, backend="csr"):
         plan = asm.plan
         rho_batch = jnp.asarray(rho_batch)
-        kb = assemble_batched(
-            plan, wf.diffusion(rho_batch[0]), leaves_batch=(rho_batch, None)
-        )
-        self.k = bc.apply_matrix_only(kb)       # masks broadcast over (B, nnz)
+        self.backend = backend
+        if backend == "matfree":
+            fam = matfree_family(
+                plan, wf.diffusion(rho_batch[0]), leaves_batch=(rho_batch, None)
+            )
+            self.k = fam.condensed(bc)
+        elif backend == "csr":
+            kb = assemble_batched(
+                plan, wf.diffusion(rho_batch[0]), leaves_batch=(rho_batch, None)
+            )
+            self.k = bc.apply_matrix_only(kb)   # masks broadcast over (B, nnz)
+        else:
+            raise ValueError(
+                f"unknown backend {backend!r}: expected 'csr' or 'matfree'"
+            )
         if f_batch is not None:
             f_batch = jnp.asarray(f_batch)
             load = assemble_rhs_batched(
@@ -205,6 +225,9 @@ class BatchedGalerkinResidualLoss:
     def solve(self, tol=1e-10, maxiter=10000) -> jnp.ndarray:
         """Direct FEM solutions of the whole family — one vmapped adjoint
         solve (reference targets / sanity checks for the learned U_b)."""
+        if self.backend == "matfree":
+            return matfree_solve_batched(self.k, self.f, "cg", tol, tol,
+                                         maxiter)
         return sparse_solve_batched(self.k, self.f, "cg", tol, tol, maxiter)
 
     def loss_from_net(self, u_fn, params_batch) -> jnp.ndarray:

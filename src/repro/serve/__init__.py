@@ -1,0 +1,63 @@
+"""repro.serve — multi-tenant batched PDE solve service.
+
+The serving tier over the TensorGalerkin core: one-shot ``.solve()`` calls
+become admitted requests that an admission batcher groups — same
+``(PlanStatic, form signature, backend)`` within a configurable window —
+into ONE vmapped family solve (:class:`~repro.core.sparse.BatchedCSR`
+assembly+solve or a :class:`~repro.core.operator.MatFreeFamily`), served
+from a persistent executable cache with warmup/pinning and LRU eviction.
+
+Module map
+----------
+* :mod:`~repro.serve.batching` — :class:`SolveRequest` /
+  :class:`SolveResponse` / :class:`PendingSolve`, admission-compatibility
+  keys, power-of-two padding buckets, the typed error family
+  (:class:`Overloaded`, :class:`DeadlineExpired`, :class:`NonConverged`).
+* :mod:`~repro.serve.cache` — :class:`ExecutableCache`: per-entry jitted
+  batched-solve closures (eviction really frees the executable), pinning.
+* :mod:`~repro.serve.service` — :class:`SolveService`: bounded admission
+  queue, dispatch worker, deadline/shedding/non-convergence policies, all
+  accounting through :mod:`repro.telemetry`.
+* :mod:`~repro.serve.client` — request factories and the synthetic
+  open-loop (Poisson-arrival) load driver + :class:`LoadReport`.
+
+Quick start::
+
+    from repro import serve, telemetry
+    telemetry.enable()
+    reqs = serve.poisson_requests(n_requests=16, backend="csr")
+    with serve.SolveService(window=0.002) as svc:
+        svc.warmup(reqs[0], batch_sizes=(16,))
+        report = serve.open_loop_load(svc, reqs, rate=2000.0)
+    print(report.e2e_p99_us, report.cache_hit_rate)
+"""
+
+from .batching import (  # noqa: F401
+    DeadlineExpired,
+    NonConverged,
+    Overloaded,
+    PendingSolve,
+    SolveRequest,
+    SolveResponse,
+    admission_key,
+    pad_bucket,
+)
+from .cache import ExecutableCache  # noqa: F401
+from .client import LoadReport, open_loop_load, poisson_requests  # noqa: F401
+from .service import SolveService  # noqa: F401
+
+__all__ = [
+    "SolveService",
+    "SolveRequest",
+    "SolveResponse",
+    "PendingSolve",
+    "ExecutableCache",
+    "Overloaded",
+    "DeadlineExpired",
+    "NonConverged",
+    "admission_key",
+    "pad_bucket",
+    "LoadReport",
+    "open_loop_load",
+    "poisson_requests",
+]

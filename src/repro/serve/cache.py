@@ -1,0 +1,135 @@
+"""Persistent executable cache for the solve service.
+
+One cache entry is one *independently jitted* batched-solve closure keyed on
+``(admission key, padded batch size)``.  ``jax.jit`` is applied per entry
+(not at module level), so evicting an entry really drops its compiled
+executable — the global module-level jit caches the core uses would keep
+every signature alive forever, which is the wrong lifetime for a
+multi-tenant service where old plans come and go.
+
+Entries survive across requests and waves (that's the point: after a warmup
+wave every subsequent wave is a pure cache hit — zero retraces, verified by
+the ``jit_traces{kind=serve}`` telemetry counters).  ``pin()``-ed entries
+(e.g. from :meth:`~repro.serve.service.SolveService.warmup`) are exempt
+from LRU eviction.
+
+Every lookup is accounted through ``telemetry.count_cache("serve_exec",
+hit)`` and every (re)compilation bumps the trace counter via
+``telemetry.count_trace("serve", static, spec, backend=...)`` inside the
+traced body — the exact counters the serving SLO gate reads.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+
+import jax
+
+from .. import telemetry
+from ..core.operator import matfree_family
+from ..core.solvers import matfree_solve_batched, sparse_solve_batched
+
+__all__ = ["ExecutableCache"]
+
+
+def _build_executable(template, key):
+    """One batched-solve closure for a compatibility class, built from a
+    representative request.  Signature: ``fn(plan, leaves, rhs) -> (X, info)``
+    with every coefficient leaf batched ``(B, ...)`` and ``rhs: (B, n)``.
+
+    The template's *values* never leak into later batches — the lowered form
+    only contributes its static signature; all traced leaves are replaced by
+    the stacked per-request arrays.
+    """
+    form, bc, backend = template.form, template.bc, template.backend
+    method, tol, maxiter = template.method, template.tol, template.maxiter
+    spec = template.spec
+
+    if backend == "matfree":
+
+        def _run(plan, leaves, rhs):
+            telemetry.count_trace("serve", plan.static, spec, backend=backend)
+            fam = matfree_family(plan, form, leaves_batch=leaves)
+            if bc is not None:
+                fam = fam.condensed(bc)
+                rhs = rhs * bc.free_mask
+            return matfree_solve_batched(
+                fam, rhs, method, tol, tol, maxiter, return_info=True)
+
+    else:
+        from ..core.assembly import assemble_batched
+
+        def _run(plan, leaves, rhs):
+            telemetry.count_trace("serve", plan.static, spec, backend=backend)
+            kb = assemble_batched(plan, form, leaves_batch=leaves)
+            if bc is not None:
+                kb = bc.apply_matrix_only(kb)
+                rhs = rhs * bc.free_mask
+            return sparse_solve_batched(
+                kb, rhs, method, tol, tol, maxiter, return_info=True)
+
+    return jax.jit(_run)
+
+
+class ExecutableCache:
+    """LRU cache of jitted batched-solve executables with pinning.
+
+    ``capacity`` bounds the number of *unpinned* entries; pinned entries
+    (warmed-up production signatures) never count against it and never
+    evict.  Thread-safe use is the caller's job — the service only touches
+    the cache from its single dispatch thread.
+    """
+
+    def __init__(self, capacity: int = 32):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self._entries: OrderedDict = OrderedDict()
+        self._pinned: set = set()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def get(self, key: tuple, padded_batch: int, template):
+        """The executable for ``(key, padded_batch)``, building (and
+        possibly evicting) on miss."""
+        full_key = (key, padded_batch)
+        hit = full_key in self._entries
+        telemetry.count_cache("serve_exec", hit)
+        if hit:
+            self.hits += 1
+            self._entries.move_to_end(full_key)
+            return self._entries[full_key], True
+        self.misses += 1
+        fn = _build_executable(template, key)
+        self._entries[full_key] = fn
+        self._evict()
+        return fn, False
+
+    def pin(self, key: tuple, padded_batch: int) -> None:
+        """Exempt an entry from eviction (idempotent; the entry need not
+        exist yet — pinning is by key)."""
+        self._pinned.add((key, padded_batch))
+
+    def unpin(self, key: tuple, padded_batch: int) -> None:
+        self._pinned.discard((key, padded_batch))
+        self._evict()
+
+    def _evict(self) -> None:
+        unpinned = [k for k in self._entries if k not in self._pinned]
+        while len(unpinned) > self.capacity:
+            victim = unpinned.pop(0)  # least recently used unpinned entry
+            del self._entries[victim]
+            self.evictions += 1
+            telemetry.counter_inc("serve_cache_evictions")
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self._pinned.clear()
+
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0

@@ -1,0 +1,319 @@
+"""`SolveService` — the multi-tenant batched PDE solve front-end.
+
+Request lifecycle::
+
+    submit() ──▶ admission queue ──▶ [window] ──▶ group by admission key
+       │              │                               │
+       │ queue full   │ deadline passed               ▼
+       ▼              ▼                      pad to bucket, fetch/compile
+    "overloaded"   "expired"                 executable, ONE vmapped solve
+                                                      │
+                                                      ▼
+                                        per-request slice → PendingSolve
+
+The admission window is open-ended batching: the dispatch worker wakes on
+the first queued request, sleeps ``window`` seconds while compatible
+requests accumulate, then drains the queue grouped by
+:func:`~repro.serve.batching.admission_key` — each group becomes one
+:class:`~repro.core.sparse.BatchedCSR` assembly+solve or one
+:class:`~repro.core.operator.MatFreeFamily` solve, padded to a power-of-two
+bucket so wave-to-wave size jitter never recompiles.
+
+All accounting goes through :mod:`repro.telemetry` — no timing machinery of
+its own:
+
+* ``serve_queue_wait_us`` / ``serve_e2e_us`` histograms (p50/p90/p99 via
+  ``telemetry.snapshot()``; the SLO gate reads these),
+* ``serve_batch_size`` histogram,
+* ``serve_requests{outcome=...}`` counters (ok / shed / expired /
+  nonconverged),
+* ``cache_lookups{kind=serve_exec}`` + ``jit_traces{kind=serve}`` — the
+  executable-cache hit rate and the zero-retrace-after-warmup proof,
+* ``record_solve("serve.dispatch", ...)`` — Krylov iteration stats and
+  solve wall time per dispatched batch.
+
+Non-converged solves follow the PR-5 policy
+(``telemetry.nonconverged_policy()``): ``"warn"`` answers ``"ok"`` with a
+:class:`~repro.telemetry.ConvergenceWarning`; ``"raise"`` answers
+``"nonconverged"`` with a typed :class:`~repro.serve.batching.NonConverged`
+error on exactly the requests whose instance hit ``maxiter``; ``"ignore"``
+stays silent.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+import warnings
+from collections import OrderedDict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import telemetry
+from ..telemetry.events import ConvergenceWarning
+from .batching import (
+    DeadlineExpired,
+    NonConverged,
+    Overloaded,
+    PendingSolve,
+    SolveRequest,
+    SolveResponse,
+    admission_key,
+    pad_bucket,
+)
+from .cache import ExecutableCache
+
+__all__ = ["SolveService"]
+
+
+class SolveService:
+    """Admission-batched solve service over one or more assembly plans.
+
+    ``window``: seconds the dispatcher waits after the first queued request
+    before draining (the batching window — higher amortizes better, costs
+    p50 latency).  ``max_batch`` bounds one dispatched family;
+    ``queue_limit`` bounds the admission queue (submissions beyond it are
+    shed with an ``"overloaded"`` response).  ``cache_capacity`` sizes the
+    unpinned part of the executable cache.
+
+    Use as a context manager (starts/stops the dispatch thread), or leave
+    it unstarted and call :meth:`drain` for synchronous, deterministic
+    dispatch (tests, batch jobs).
+    """
+
+    def __init__(self, *, window: float = 0.002, max_batch: int = 64,
+                 queue_limit: int = 1024, cache_capacity: int = 32):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if queue_limit < 1:
+            raise ValueError(f"queue_limit must be >= 1, got {queue_limit}")
+        self.window = float(window)
+        self.max_batch = int(max_batch)
+        self.queue_limit = int(queue_limit)
+        self.cache = ExecutableCache(cache_capacity)
+        self._queue: list[tuple[PendingSolve, float, float | None]] = []
+        self._lock = threading.Lock()
+        self._wake = threading.Condition(self._lock)
+        self._worker: threading.Thread | None = None
+        self._stopping = False
+
+    # -- lifecycle ---------------------------------------------------------
+    def start(self) -> "SolveService":
+        """Start the dispatch thread (idempotent).  Requests submitted
+        before ``start()`` sit in the queue and dispatch on the first
+        window after it."""
+        with self._lock:
+            if self._worker is not None:
+                return self
+            self._stopping = False
+            self._worker = threading.Thread(
+                target=self._worker_loop, name="repro-serve-dispatch",
+                daemon=True)
+        self._worker.start()
+        return self
+
+    def stop(self) -> None:
+        """Drain the queue, then stop the dispatch thread."""
+        with self._lock:
+            worker, self._worker = self._worker, None
+            self._stopping = True
+            self._wake.notify_all()
+        if worker is not None:
+            worker.join()
+        self.drain()
+
+    def __enter__(self) -> "SolveService":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- admission ---------------------------------------------------------
+    def submit(self, request: SolveRequest) -> PendingSolve:
+        """Admit one request.  Returns immediately with a
+        :class:`PendingSolve`; if the admission queue is full the future is
+        already resolved with an ``"overloaded"`` response (typed
+        :class:`Overloaded` error from ``result()``) — overload is shed, not
+        queued."""
+        now = time.monotonic()
+        pending = PendingSolve(request)
+        deadline = None if request.timeout is None else now + request.timeout
+        with self._lock:
+            if len(self._queue) >= self.queue_limit:
+                telemetry.counter_inc("serve_requests", outcome="shed")
+                pending._resolve(SolveResponse(
+                    status="overloaded",
+                    error=Overloaded(
+                        f"admission queue full ({self.queue_limit} pending)"),
+                    t_submit=now, t_dispatch=now, t_done=now,
+                ))
+                return pending
+            self._queue.append((pending, now, deadline))
+            self._wake.notify_all()
+        return pending
+
+    def solve(self, request: SolveRequest, timeout: float | None = None):
+        """Convenience synchronous path: submit and wait.  With no worker
+        running the queue is drained inline."""
+        pending = self.submit(request)
+        if self._worker is None and not pending.done():
+            self.drain()
+        return pending.result(timeout)
+
+    # -- dispatch ----------------------------------------------------------
+    def drain(self) -> int:
+        """Synchronously dispatch everything queued right now (no window
+        wait).  Returns the number of requests answered — the deterministic
+        path used by tests and by :meth:`stop`."""
+        with self._lock:
+            batch, self._queue = self._queue, []
+        return self._dispatch(batch)
+
+    def _worker_loop(self) -> None:
+        while True:
+            with self._lock:
+                while not self._queue and not self._stopping:
+                    self._wake.wait()
+                if self._stopping:
+                    return
+            # open the admission window: compatible requests accumulate
+            if self.window > 0:
+                time.sleep(self.window)
+            with self._lock:
+                batch, self._queue = self._queue, []
+            self._dispatch(batch)
+
+    def _dispatch(self, entries) -> int:
+        """Group → pad → run → slice → resolve.  ``entries`` are
+        ``(pending, t_submit, deadline)`` triples."""
+        if not entries:
+            return 0
+        now = time.monotonic()
+        groups: OrderedDict = OrderedDict()
+        n_done = 0
+        for pending, t_submit, deadline in entries:
+            if deadline is not None and now > deadline:
+                telemetry.counter_inc("serve_requests", outcome="expired")
+                pending._resolve(SolveResponse(
+                    status="expired",
+                    error=DeadlineExpired(
+                        f"request {pending.request.request_id} expired after "
+                        f"{now - t_submit:.3f}s in the admission queue"),
+                    t_submit=t_submit, t_dispatch=now, t_done=now,
+                ))
+                n_done += 1
+                continue
+            key = admission_key(pending.request)
+            groups.setdefault(key, []).append((pending, t_submit))
+        for key, members in groups.items():
+            for start in range(0, len(members), self.max_batch):
+                chunk = members[start:start + self.max_batch]
+                self._run_group(key, chunk)
+                n_done += len(chunk)
+        return n_done
+
+    def _run_group(self, key, members) -> None:
+        pendings = [p for p, _ in members]
+        submits = [t for _, t in members]
+        template = pendings[0].request
+        b = len(pendings)
+        padded = min(pad_bucket(b), self.max_batch)
+        t_dispatch = time.monotonic()
+        for t in submits:
+            telemetry.histogram_observe(
+                "serve_queue_wait_us", 1e6 * (t_dispatch - t),
+                backend=template.backend)
+        telemetry.histogram_observe("serve_batch_size", b,
+                                    backend=template.backend)
+        try:
+            fn, cache_hit = self.cache.get(key, padded, template)
+            leaves = tuple(
+                _stack_padded([p.request.leaves[j] for p in pendings], padded)
+                for j in range(len(template.leaves))
+            )
+            rhs = _stack_padded([p.request.rhs for p in pendings], padded)
+            x_pad, info_pad = fn(template.plan, leaves, rhs)
+            x = np.asarray(x_pad)[:b]
+            converged = np.asarray(info_pad.converged)[:b]
+            iters = np.asarray(info_pad.iters)[:b]
+            residual = np.asarray(info_pad.residual)[:b]
+        except Exception as err:  # compile/solve failure → fail the batch
+            t_done = time.monotonic()
+            telemetry.counter_inc("serve_requests", value=b, outcome="failed")
+            for p, t in members:
+                p._resolve(SolveResponse(
+                    status="failed", error=err, batch_size=b,
+                    t_submit=t, t_dispatch=t_dispatch, t_done=t_done))
+            return
+        t_done = time.monotonic()
+        info_b = jax.tree_util.tree_map(
+            lambda leaf: np.asarray(leaf)[:b], info_pad)
+        telemetry.record_solve(
+            "serve.dispatch", info_b, method=template.method,
+            backend=template.backend, wall_us=1e6 * (t_done - t_dispatch),
+            batch=b, padded=padded, cache_hit=cache_hit)
+        policy = telemetry.nonconverged_policy()
+        for i, (p, t) in enumerate(members):
+            resp = SolveResponse(
+                status="ok", u=jnp.asarray(x[i]),
+                info=jax.tree_util.tree_map(lambda leaf: leaf[i], info_b),
+                batch_size=b, cache_hit=cache_hit,
+                t_submit=t, t_dispatch=t_dispatch, t_done=t_done,
+            )
+            if not converged[i]:
+                msg = (f"request {p.request.request_id}: solve not converged "
+                       f"after {int(iters[i])} iterations "
+                       f"(residual {float(residual[i]):.3e})")
+                if policy == "raise":
+                    resp.status = "nonconverged"
+                    resp.error = NonConverged(msg)
+                    resp.u = None
+                    telemetry.counter_inc("serve_requests",
+                                          outcome="nonconverged")
+                else:
+                    if policy == "warn":
+                        warnings.warn(msg, ConvergenceWarning, stacklevel=2)
+                    telemetry.counter_inc("serve_requests", outcome="ok")
+            else:
+                telemetry.counter_inc("serve_requests", outcome="ok")
+            telemetry.histogram_observe(
+                "serve_e2e_us", 1e6 * (t_done - t),
+                backend=template.backend)
+            p._resolve(resp)
+
+    # -- warmup ------------------------------------------------------------
+    def warmup(self, request: SolveRequest, batch_sizes=(1,),
+               pin: bool = True) -> None:
+        """Pre-compile (and optionally pin) the executables a production
+        signature needs: one padded-bucket executable per entry of
+        ``batch_sizes``.  The request's coefficient values are only a
+        template — warmup runs real (cold) solves on copies of it so the
+        first tenant wave is a pure cache hit."""
+        key = admission_key(request)
+        for bs in batch_sizes:
+            padded = min(pad_bucket(int(bs)), self.max_batch)
+            if pin:
+                self.cache.pin(key, padded)
+            fn, hit = self.cache.get(key, padded, request)
+            if not hit:
+                leaves = tuple(
+                    _stack_padded([request.leaves[j]], padded)
+                    for j in range(len(request.leaves))
+                )
+                rhs = _stack_padded([request.rhs], padded)
+                x, _ = fn(request.plan, leaves, rhs)
+                jax.block_until_ready(x)
+
+
+def _stack_padded(arrays, padded: int) -> jnp.ndarray:
+    """Stack per-request arrays to ``(padded, ...)``, repeating the last
+    entry into the padding rows (padding solves then converge like real
+    ones instead of iterating on garbage)."""
+    out = jnp.stack([jnp.asarray(a) for a in arrays])
+    if out.shape[0] < padded:
+        reps = jnp.broadcast_to(
+            out[-1], (padded - out.shape[0],) + out.shape[1:])
+        out = jnp.concatenate([out, reps], axis=0)
+    return out

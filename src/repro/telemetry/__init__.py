@@ -52,6 +52,8 @@ from .metrics import (  # noqa: F401
     is_enabled,
     jit_trace_total,
     jsonl_path,
+    metric_rows,
+    nonconverged_policy,
     reset,
     snapshot,
 )
@@ -60,11 +62,13 @@ from .trace import annotate, capture  # noqa: F401
 __all__ = [
     # switchboard
     "enable", "disable", "enabled", "is_enabled", "reset", "jsonl_path",
+    "nonconverged_policy",
     # tracing
     "annotate", "capture",
     # metrics
     "counter_inc", "gauge_set", "histogram_observe", "count_trace",
     "count_cache", "jit_trace_total", "snapshot", "export_jsonl",
+    "metric_rows",
     # events / convergence
     "record_event", "record_solve", "record_assembly", "check_convergence",
     "event_log", "clear_events", "ConvergenceWarning", "NonConvergedError",

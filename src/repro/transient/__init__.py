@@ -81,7 +81,28 @@ def batched_theta_rollout(lhs_full, rhs_op, u0_batch, n_steps: int, *, dt,
     ``lax.scan`` — a single XLA executable, no per-instance re-vmapping of
     raw value vectors.  ``u0_batch: (B, N) → (B, n_steps, N)``; ``loads`` /
     ``bc_values`` are shared across the batch.
+
+    Both operators may instead be
+    :class:`~repro.core.operator.MatFreeFamily` (from
+    :func:`repro.core.matfree_family` on the two effective forms): the
+    family rolls out matrix-free — per-step solves through
+    ``matfree_solve``, zero CSR values materialized for the whole batch.
     """
+    if hasattr(lhs_full, "in_axes"):  # MatFreeFamily pair
+        integrator_kwargs.setdefault("backend", "matfree")
+        integrator_kwargs.setdefault("solver", "cg")
+
+        def one_mf(lhs_op, rhs_op_b, u0):
+            integ = ThetaIntegrator(
+                None, None, dt, theta=theta, bc=bc,
+                lhs_full=lhs_op, rhs_op=rhs_op_b, **integrator_kwargs,
+            )
+            return integ.rollout(u0, n_steps, loads=loads, bc_values=bc_values,
+                                 checkpoint_every=checkpoint_every)
+
+        return jax.vmap(
+            one_mf, in_axes=(lhs_full.in_axes(), rhs_op.in_axes(), 0)
+        )(lhs_full.op, rhs_op.op, u0_batch)
 
     def one(lhs_b, rhs_b, u0):
         integ = ThetaIntegrator(

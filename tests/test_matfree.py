@@ -455,3 +455,198 @@ def test_matfree_state_is_small():
     csr_bytes = k.vals.nbytes + k.indices.nbytes + k.row_of_nnz.nbytes
     assert op.state_bytes() < csr_bytes / 2
     assert isinstance(k, CSR)
+
+
+# ---------------------------------------------------------------------------
+# batched matrix-free families (PR 7): (B, ...) coefficient leaves on one
+# shared plan — vmap-able diagonal()/condensed(), family solves + gradients
+# ---------------------------------------------------------------------------
+
+from repro.core import (  # noqa: E402
+    MatFreeFamily,
+    assemble_batched,
+    matfree_family,
+    matfree_solve_batched,
+)
+
+
+def _family_fixture(batch=4, n=6, seed=3):
+    space = _space(unit_square_tri(n))
+    plan = build_plan(space)
+    rng = np.random.default_rng(seed)
+    rho_b = jnp.asarray(
+        rng.uniform(0.5, 2.0, (batch, space.mesh.num_cells)))
+    bc = DirichletCondenser(plan.static.mat_routing, space.boundary_dofs())
+    return plan, rho_b, bc
+
+
+@pytest.mark.parametrize("store", ["context", "coords", "local"])
+def test_family_matvec_diagonal_parity(store):
+    plan, rho_b, _ = _family_fixture()
+    fam = matfree_family(plan, wf.diffusion(rho_b[0]),
+                         leaves_batch=(rho_b, None), store=store)
+    assert isinstance(fam, MatFreeFamily) and fam.batch == rho_b.shape[0]
+    x = jnp.asarray(RNG.normal(size=fam.shape[0]))
+    y = fam.matvec(x)
+    d = fam.diagonal()
+    for b in range(fam.batch):
+        op_b = matfree_operator(plan, wf.diffusion(rho_b[b]))
+        np.testing.assert_allclose(np.asarray(y[b]),
+                                   np.asarray(op_b.matvec(x)), atol=1e-12)
+        np.testing.assert_allclose(np.asarray(d[b]),
+                                   np.asarray(op_b.diagonal()), atol=1e-12)
+
+
+def test_family_condensed_diagonal_under_vmap():
+    # satellite regression: diagonal() and condensed(bc) must work when
+    # vmapped over coefficient leaves (family Jacobi preconditioning)
+    plan, rho_b, bc = _family_fixture()
+    fam = matfree_family(plan, wf.diffusion(rho_b[0]),
+                         leaves_batch=(rho_b, None)).condensed(bc)
+    d = fam.diagonal()
+    x = jnp.asarray(RNG.normal(size=fam.shape[0]))
+    y = fam.matvec(x)
+    for b in range(fam.batch):
+        opc = matfree_operator(plan, wf.diffusion(rho_b[b])).condensed(bc)
+        np.testing.assert_allclose(np.asarray(d[b]),
+                                   np.asarray(opc.diagonal()), atol=1e-12)
+        np.testing.assert_allclose(np.asarray(y[b]),
+                                   np.asarray(opc.matvec(x)), atol=1e-12)
+
+
+def test_family_getitem_and_validation():
+    plan, rho_b, _ = _family_fixture()
+    fam = matfree_family(plan, wf.diffusion(rho_b[0]),
+                         leaves_batch=(rho_b, None))
+    x = jnp.asarray(RNG.normal(size=fam.shape[0]))
+    np.testing.assert_allclose(np.asarray(fam[2].matvec(x)),
+                               np.asarray(fam.matvec(x)[2]), atol=1e-12)
+    with pytest.raises(TypeError):
+        fam[0:2]
+    with pytest.raises(ValueError, match="nothing is batched"):
+        matfree_family(plan, wf.diffusion(rho_b[0]))
+    with pytest.raises(ValueError, match="leaves_batch has"):
+        matfree_family(plan, wf.diffusion(rho_b[0]), leaves_batch=(rho_b,))
+    with pytest.raises(ValueError, match="inconsistent"):
+        matfree_family(plan, wf.mass(1.0) + wf.diffusion(rho_b[0]),
+                       leaves_batch=(jnp.ones((3, 1)), None, rho_b, None))
+
+
+def test_family_solve_matches_sequential_and_batched_csr():
+    plan, rho_b, bc = _family_fixture()
+    f = jnp.asarray(RNG.normal(size=(rho_b.shape[0], plan.static.num_dofs)))
+    f = f * bc.free_mask
+    fam = matfree_family(plan, wf.diffusion(rho_b[0]),
+                         leaves_batch=(rho_b, None)).condensed(bc)
+    x = matfree_solve_batched(fam, f, "cg", 1e-12, 1e-12, 10000)
+    kb = bc.apply_matrix_only(assemble_batched(
+        plan, wf.diffusion(rho_b[0]), leaves_batch=(rho_b, None)))
+    from repro.core import sparse_solve_batched
+    x_csr = sparse_solve_batched(kb, f, "cg", 1e-12, 1e-12, 10000)
+    np.testing.assert_allclose(np.asarray(x), np.asarray(x_csr), atol=1e-9)
+    for b in range(fam.batch):
+        opc = matfree_operator(plan, wf.diffusion(rho_b[b])).condensed(bc)
+        xb = matfree_solve(opc, f[b], "cg", 1e-12, 1e-12, 10000)
+        np.testing.assert_allclose(np.asarray(x[b]), np.asarray(xb),
+                                   atol=1e-9)
+
+
+def test_family_solve_info_and_record():
+    plan, rho_b, bc = _family_fixture()
+    f = bc.project_residual(
+        jnp.asarray(RNG.normal(size=plan.static.num_dofs)))
+    fam = matfree_family(plan, wf.diffusion(rho_b[0]),
+                         leaves_batch=(rho_b, None)).condensed(bc)
+    x, info = matfree_solve_batched(fam, f, return_info=True)
+    assert x.shape == (fam.batch, plan.static.num_dofs)
+    assert info.iters.shape == (fam.batch,)
+    assert bool(jnp.all(info.converged))
+
+
+def test_family_grad_matches_per_instance_adjoints():
+    # acceptance: gradients through the vmapped family solve match B
+    # per-instance adjoint matfree_solve gradients to <= 1e-12 (relative)
+    plan, rho_b, bc = _family_fixture(batch=3)
+    f = bc.project_residual(
+        jnp.asarray(RNG.normal(size=plan.static.num_dofs)))
+
+    def loss_family(rb):
+        fam = matfree_family(plan, wf.diffusion(rb[0]),
+                             leaves_batch=(rb, None)).condensed(bc)
+        return jnp.sum(matfree_solve_batched(fam, f, "cg", 1e-12, 1e-12,
+                                             10000) ** 2)
+
+    def loss_sequential(rb):
+        tot = 0.0
+        for b in range(rb.shape[0]):
+            opc = matfree_operator(plan, wf.diffusion(rb[b])).condensed(bc)
+            tot = tot + jnp.sum(
+                matfree_solve(opc, f, "cg", 1e-12, 1e-12, 10000) ** 2)
+        return tot
+
+    g1 = jax.grad(loss_family)(rho_b)
+    g2 = jax.grad(loss_sequential)(rho_b)
+    scale = float(jnp.max(jnp.abs(g2)))
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                               atol=1e-12 * scale)
+
+
+def test_family_batched_coords():
+    # batched geometry: perturb each instance's mesh, store forced to coords
+    plan, rho_b, _ = _family_fixture()
+    batch = rho_b.shape[0]
+    rng = np.random.default_rng(11)
+    coords_b = jnp.asarray(
+        np.asarray(plan.coords)[None]
+        + 1e-3 * rng.normal(size=(batch,) + plan.coords.shape))
+    fam = matfree_family(plan, wf.diffusion(rho_b[0]),
+                         leaves_batch=(rho_b, None), coords_batch=coords_b)
+    assert fam.op.store == "coords" and fam.coords_ax == 0
+    x = jnp.asarray(RNG.normal(size=fam.shape[0]))
+    y = fam.matvec(x)
+    for b in range(batch):
+        op_b = matfree_operator(plan, wf.diffusion(rho_b[b]), store="coords",
+                                coords=coords_b[b])
+        np.testing.assert_allclose(np.asarray(y[b]),
+                                   np.asarray(op_b.matvec(x)), atol=1e-12)
+
+
+def test_family_theta_rollout_matches_batched_csr():
+    from repro.transient import batched_theta_rollout
+
+    plan, kap_b, bc = _family_fixture()
+    batch, dt, theta, n_steps = kap_b.shape[0], 0.01, 1.0, 4
+    u0 = jnp.asarray(RNG.normal(size=(batch, plan.static.num_dofs)))
+    u0 = u0 * bc.free_mask
+    lhs_form = wf.mass(1.0) + (theta * dt) * wf.diffusion(kap_b[0])
+    rhs_form = wf.mass(1.0) + (-(1 - theta) * dt) * wf.diffusion(kap_b[0])
+    lb = (None, None, kap_b, None)
+    traj_csr = batched_theta_rollout(
+        assemble_batched(plan, lhs_form, leaves_batch=lb),
+        assemble_batched(plan, rhs_form, leaves_batch=lb),
+        u0, n_steps, dt=dt, theta=theta, bc=bc)
+    traj_mf = batched_theta_rollout(
+        matfree_family(plan, lhs_form, leaves_batch=lb),
+        matfree_family(plan, rhs_form, leaves_batch=lb),
+        u0, n_steps, dt=dt, theta=theta, bc=bc)
+    np.testing.assert_allclose(np.asarray(traj_mf), np.asarray(traj_csr),
+                               atol=1e-10)
+
+
+def test_family_pils_loss_backend_parity():
+    from repro.pils.losses import BatchedGalerkinResidualLoss
+
+    space = _space(unit_square_tri(6))
+    asm = GalerkinAssembler(space)
+    plan = build_plan(space)
+    bc = DirichletCondenser(plan.static.mat_routing, space.boundary_dofs())
+    rng = np.random.default_rng(5)
+    rho_b = jnp.asarray(rng.uniform(0.5, 2.0, (3, space.mesh.num_cells)))
+    l_csr = BatchedGalerkinResidualLoss(asm, bc, rho_b)
+    l_mf = BatchedGalerkinResidualLoss(asm, bc, rho_b, backend="matfree")
+    u = jnp.asarray(rng.normal(size=(3, space.num_dofs)))
+    np.testing.assert_allclose(float(l_mf(u)), float(l_csr(u)), rtol=1e-12)
+    np.testing.assert_allclose(np.asarray(l_mf.solve()),
+                               np.asarray(l_csr.solve()), atol=1e-9)
+    with pytest.raises(ValueError, match="unknown backend"):
+        BatchedGalerkinResidualLoss(asm, bc, rho_b, backend="ell")

@@ -2,7 +2,10 @@
 scatter-add baseline vs a per-element Python loop, across mesh sizes.
 
 Derived column: speedup over scatter-add, and jaxpr-equation count (which
-must not grow with E — the O(1) claim)."""
+must not grow with E — the O(1) claim).  The Map-Reduce rows emit JSON and
+are gated by the perf-smoke CI pipeline against ``BENCH_baseline.json``
+(quick mode runs the two smallest meshes; row names encode E, so quick and
+full baselines never mix)."""
 
 import jax
 import jax.numpy as jnp
@@ -10,11 +13,12 @@ import jax.numpy as jnp
 from repro.core import FunctionSpace, GalerkinAssembler, unit_square_tri
 from repro.core.mesh import element_for_mesh
 
-from .common import emit, time_fn
+from .common import emit, emit_json, is_quick, time_fn
 
 
 def main():
-    for n in (16, 32, 64, 128):
+    quick = is_quick()
+    for n in (16, 32) if quick else (16, 32, 64, 128):
         m = unit_square_tri(n)
         space = FunctionSpace(m, element_for_mesh(m))
         asm = GalerkinAssembler(space)
@@ -31,10 +35,15 @@ def main():
             return reduce_matrix(forms.diffusion(asm.context(coords), r), asm.mat_routing)
 
         n_eqns = len(jax.make_jaxpr(assemble)(asm.coords, rho).jaxpr.eqns)
-        emit(
+        emit_json(
             f"assembly_mapreduce_E{m.num_cells}", t_mr,
             f"jaxpr_eqns={n_eqns};scatter_us={t_sc:.1f}",
+            num_cells=m.num_cells, dofs=space.num_dofs,
+            jaxpr_eqns=n_eqns, scatter_us=round(t_sc, 1),
         )
+
+    if quick:
+        return
 
     # per-element loop baseline (tiny mesh only; the paper's 'white box')
     m = unit_square_tri(8)

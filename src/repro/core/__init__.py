@@ -50,6 +50,7 @@ from .operator import (  # noqa: E402,F401
     LinearOperator,
     MatFreeFamily,
     MatFreeOperator,
+    ShardedMatFreeOperator,
     matfree_family,
     matfree_operator,
     n_matfree_traces,

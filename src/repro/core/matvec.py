@@ -12,9 +12,17 @@ backend        apply path
 ``csr``        gather + sorted segment-sum on the assembled values
                (differentiable; the adjoint-solve default)
 ``ell``        padded ELLPACK gather, pure jnp (bounded-valence FEM layout)
-``ell_pallas`` the Pallas TPU SpMV kernel over the ELL layout
+``ell_pallas`` the Pallas TPU SpMV kernel over the ELL layout (broadcast
+               plan: ``x`` replicated into VMEM per row block)
+``ell_stream`` the streaming Pallas SpMV: ``x`` stays HBM-resident, row
+               blocks double-buffered through VMEM by async DMA — VMEM use
+               is independent of N, so million-DOF operators fit
 ``matfree``    element-local Map → per-element action → scatter-Reduce,
                no global values (:mod:`repro.core.operator`)
+``matfree_sharded``  the matrix-free apply ``shard_map``-partitioned over
+               the element axis of the local device mesh: per-device
+               partial scatter + one psum — a single Krylov solve spans
+               all devices (:class:`repro.core.operator.ShardedMatFreeOperator`)
 =============  =============================================================
 
 ``make_matvec(op, backend)`` returns the apply closure;
@@ -80,8 +88,33 @@ def _ell_pallas_matvec(op) -> Callable:
     return lambda x: ell_matvec(ell, x)
 
 
+def _ell_stream_matvec(op) -> Callable:
+    from ..kernels import ell_matvec_stream
+
+    ell = csr_to_ell(_require_csr(op, "ell_stream"))
+    return lambda x: ell_matvec_stream(ell, x)
+
+
 def _matfree_matvec(op) -> Callable:
     return _require_matfree(op).matvec
+
+
+def _as_sharded(op):
+    from .operator import MatFreeOperator, ShardedMatFreeOperator
+
+    op = _require_matfree(op)
+    if isinstance(op, ShardedMatFreeOperator):
+        return op
+    if isinstance(op, MatFreeOperator):
+        return op.sharded()
+    raise TypeError(
+        "backend 'matfree_sharded' needs a MatFreeOperator (or an already "
+        f"sharded one), got {type(op).__name__}"
+    )
+
+
+def _matfree_sharded_matvec(op) -> Callable:
+    return _as_sharded(op).matvec
 
 
 def _csr_residual(op) -> Callable:
@@ -100,8 +133,20 @@ def _ell_pallas_residual(op) -> Callable:
     return lambda u, f: ell_residual(ell, u, f)
 
 
+def _ell_stream_residual(op) -> Callable:
+    from ..kernels import ell_residual_stream
+
+    ell = csr_to_ell(_require_csr(op, "ell_stream"))
+    return lambda u, f: ell_residual_stream(ell, u, f)
+
+
 def _matfree_residual(op) -> Callable:
     mv = _require_matfree(op).matvec
+    return lambda u, f: mv(u) - f
+
+
+def _matfree_sharded_residual(op) -> Callable:
+    mv = _as_sharded(op).matvec
     return lambda u, f: mv(u) - f
 
 
@@ -110,7 +155,9 @@ _BACKENDS: dict[str, tuple[Callable, Callable]] = {
     "csr": (_csr_matvec, _csr_residual),
     "ell": (_ell_matvec, _ell_residual),
     "ell_pallas": (_ell_pallas_matvec, _ell_pallas_residual),
+    "ell_stream": (_ell_stream_matvec, _ell_stream_residual),
     "matfree": (_matfree_matvec, _matfree_residual),
+    "matfree_sharded": (_matfree_sharded_matvec, _matfree_sharded_residual),
 }
 
 # the BUILT-IN backends — a constant, never rebound, so every import-time

@@ -59,6 +59,7 @@ __all__ = [
     "LinearOperator",
     "MatFreeOperator",
     "MatFreeFamily",
+    "ShardedMatFreeOperator",
     "matfree_operator",
     "matfree_family",
     "n_matfree_traces",
@@ -322,27 +323,42 @@ class MatFreeOperator(LinearOperator):
         feeding :func:`~repro.core.solvers.jacobi_preconditioner`."""
         return _diag_jit(self)
 
+    def _diag_local(self):
+        if self.k_local is not None:
+            return jnp.einsum("eaa->ea", self.k_local)
+        ctx, vs = self._context(), self.static.value_size
+        d_local = None
+        for kind, coeffs, scale in self._term_values():
+            entry = _ACTIONS.get(kind)
+            d = (
+                entry[2](ctx, vs, *coeffs)
+                if entry is not None
+                else _generic_diag(kind, ctx, vs, *coeffs)
+            )
+            d = d * jnp.asarray(scale)
+            d_local = d if d_local is None else d_local + d
+        return d_local
+
     def _diag_impl(self):
         st = self.static
-        if self.k_local is not None:
-            d_local = jnp.einsum("eaa->ea", self.k_local)
-        else:
-            ctx, vs = self._context(), st.value_size
-            d_local = None
-            for kind, coeffs, scale in self._term_values():
-                entry = _ACTIONS.get(kind)
-                d = (
-                    entry[2](ctx, vs, *coeffs)
-                    if entry is not None
-                    else _generic_diag(kind, ctx, vs, *coeffs)
-                )
-                d = d * jnp.asarray(scale)
-                d_local = d if d_local is None else d_local + d
+        d_local = self._diag_local()
         diag = reduce_vector(d_local, st.vec_routing, st.reduce_mode)
         if self.free_mask is not None:
             m = self.free_mask.astype(diag.dtype)
             diag = m * diag + (1.0 - m)
         return diag
+
+    def sharded(self, mesh=None, axis_name: str | None = None
+                ) -> "ShardedMatFreeOperator":
+        """This operator with its apply partitioned over the element axis of
+        a device mesh (defaults to :func:`repro.sharding.fem_mesh` over all
+        local devices) — see :class:`ShardedMatFreeOperator`."""
+        from ..sharding.partitioning import FEM_MESH_AXIS, fem_mesh
+
+        axis = FEM_MESH_AXIS if axis_name is None else axis_name
+        if mesh is None:
+            mesh = fem_mesh(axis_name=axis)
+        return ShardedMatFreeOperator(self, mesh, axis)
 
     def in_axes(self, leaf_axes=None, coords_ax=None, free_mask_ax=None,
                 k_local_ax=None, ctx_ax=None) -> "MatFreeOperator":
@@ -445,6 +461,259 @@ def matfree_operator(plan: AssemblyPlan, form, store: str = "context",
         )
     telemetry.gauge_set("operator_state_bytes", op.state_bytes(), store=store)
     return op
+
+
+# ---------------------------------------------------------------------------
+# Multi-device sharding: the same gather → action → scatter apply, with the
+# element axis partitioned over a device mesh (per-device partial scatter +
+# one psum) — a single Krylov solve spans every device with no materialized
+# matrix and no element-sized intermediate replicated anywhere.
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True, eq=False)
+class ShardedMatFreeOperator(LinearOperator):
+    """A :class:`MatFreeOperator` whose apply is ``shard_map``-partitioned
+    over the element axis (the ``repro.sharding`` FEM mesh axis).
+
+    Per apply, each device gathers from the replicated ``(n,)`` vector into
+    its *element shard* only, runs the per-element fused action on that
+    shard, reduces it to a partial touched-DoF vector, and one ``psum``
+    completes the Sparse-Reduce — the element-sized intermediates (the
+    gather, the (E, Q, ...) action state, the local results) exist only as
+    per-device shards.  ``matvec`` / ``rmatvec`` / ``diagonal`` all ride the
+    same partitioning, so :func:`~repro.core.solvers.matfree_solve` (and its
+    custom-vjp adjoint solve + operator-cotangent pullback) runs sharded
+    end-to-end.  Build with :meth:`MatFreeOperator.sharded`.
+
+    Pytree: the wrapped operator is the traced child; the device mesh and
+    axis name are aux — re-applies with new coefficient values reuse the
+    compiled sharded executable.
+    """
+
+    op: MatFreeOperator      # traced child
+    mesh: Any                # aux: jax.sharding.Mesh
+    axis_name: str           # aux
+
+    # -- pytree ----------------------------------------------------------
+    def tree_flatten(self):
+        return (self.op,), (self.mesh, self.axis_name)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], *aux)
+
+    # -- structure --------------------------------------------------------
+    @property
+    def shape(self) -> tuple[int, int]:
+        return self.op.shape
+
+    @property
+    def static(self) -> PlanStatic:
+        return self.op.static
+
+    def condensed(self, bc) -> "ShardedMatFreeOperator":
+        """Dirichlet condensation — same apply wrapper as the single-device
+        operator (the masking runs on the replicated vector, outside the
+        sharded region)."""
+        return dataclasses.replace(self, op=self.op.condensed(bc))
+
+    def state_bytes(self) -> int:
+        return self.op.state_bytes()
+
+    # -- applies ----------------------------------------------------------
+    def matvec(self, x: jnp.ndarray) -> jnp.ndarray:
+        return _sharded_apply_jit(self, x, False)
+
+    def rmatvec(self, x: jnp.ndarray) -> jnp.ndarray:
+        op = self.op
+        if op.k_local is None and all(
+            weakform.KERNELS[kind].symmetric for kind, _, _ in op.spec
+        ):
+            return _sharded_apply_jit(self, x, False)
+        return _sharded_apply_jit(self, x, True)
+
+    def diagonal(self) -> jnp.ndarray:
+        return _sharded_diag_jit(self)
+
+
+def _shard_scaffold(sop: ShardedMatFreeOperator):
+    """Static partitioning tables + the traced geometry/leaf shards and their
+    PartitionSpecs for one sharded apply/diagonal trace."""
+    from jax.sharding import PartitionSpec as P
+
+    op, mesh, axis_name = sop.op, sop.mesh, sop.axis_name
+    st = op.static
+    ndev = mesh.shape[axis_name]
+    cd = np.asarray(st.cell_dofs)
+    e = cd.shape[0]
+    pad = (-e) % ndev
+    routing = st.vec_routing
+    n_seg = routing.touched.shape[0]
+    slots = routing.seg_ids_unsorted.shape[0] // e
+
+    # static numpy precompute: padded rows carry out-of-range segment ids
+    # (dropped by segment_sum) and replicate the last element's DoFs
+    seg = routing.seg_ids_unsorted.reshape(e, slots)
+    if pad:
+        seg = np.concatenate([seg, np.full((pad, slots), n_seg, seg.dtype)])
+        cd = np.concatenate([cd, np.broadcast_to(cd[-1:], (pad,) + cd.shape[1:])])
+
+    def pad_rows(a):
+        if not pad:
+            return a
+        return jnp.concatenate(
+            [a, jnp.broadcast_to(a[-1:], (pad,) + a.shape[1:])]
+        )
+
+    shard, rep = P(axis_name), P()
+
+    # traced geometry state, store-dependent; ``rebuild`` reassembles a
+    # shard-local operator inside the shard_map body
+    if op.k_local is not None:
+        geo = (pad_rows(op.k_local),)
+        geo_specs = (shard,)
+
+        def rebuild(inner, geo_s, leaves_s):
+            return dataclasses.replace(inner, k_local=geo_s[0],
+                                       leaves=leaves_s)
+    elif op.ctx is not None:
+        ctx = op.ctx
+        fields = [("w", ctx.w, rep), ("phi", ctx.phi, rep),
+                  ("detj", pad_rows(ctx.detj), shard)]
+        if ctx.grad is not None:
+            fields.append(("grad", pad_rows(ctx.grad), shard))
+        fields.append(("xq", pad_rows(ctx.xq), shard))
+        if ctx.scalar_cell_dofs is not None:
+            fields.append(
+                ("scalar_cell_dofs", pad_rows(ctx.scalar_cell_dofs), shard))
+        names = tuple(f[0] for f in fields)
+        geo = tuple(f[1] for f in fields)
+        geo_specs = tuple(f[2] for f in fields)
+
+        def rebuild(inner, geo_s, leaves_s):
+            d = dict(zip(names, geo_s))
+            ctx_s = forms.FormContext(
+                w=d["w"], phi=d["phi"], detj=d["detj"], grad=d.get("grad"),
+                xq=d["xq"], scalar_cell_dofs=d.get("scalar_cell_dofs"),
+            )
+            return dataclasses.replace(inner, ctx=ctx_s, leaves=leaves_s)
+    else:  # store == "coords": Stage-I geometry recomputed per shard
+        scd = st.scalar_cell_dofs
+        geo = (pad_rows(op.coords),) \
+            + ((pad_rows(jnp.asarray(scd)),) if scd is not None else ())
+        geo_specs = (shard,) + ((shard,) if scd is not None else ())
+
+        def rebuild(inner, geo_s, leaves_s):
+            ctx_s = geometry_context(
+                geo_s[0], st.geo_phi, st.geo_grad, st.phi, st.gradhat, st.w,
+                scalar_cell_dofs=geo_s[1] if len(geo_s) > 1 else None,
+            )
+            return dataclasses.replace(inner, ctx=ctx_s, coords=None,
+                                       leaves=leaves_s)
+
+    # element-aligned coefficient leaves shard; everything else replicates
+    # (mirrors the leaf resolution of the sharded assembly path)
+    leaf_flags = tuple(
+        jnp.ndim(lv) >= 1 and jnp.shape(lv)[0] == e for lv in op.leaves
+    )
+    leaves_p = tuple(
+        pad_rows(jnp.asarray(lv)) if flag else jnp.asarray(lv)
+        for lv, flag in zip(op.leaves, leaf_flags)
+    )
+    leaf_specs = tuple(shard if flag else rep for flag in leaf_flags)
+
+    inner = dataclasses.replace(op, free_mask=None)
+    return (inner, rebuild, jnp.asarray(cd), jnp.asarray(seg), n_seg,
+            geo, geo_specs, leaves_p, leaf_specs, routing)
+
+
+def _sharded_mf_impl(sop: ShardedMatFreeOperator, x, transpose: bool):
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    _N_MF_TRACES[0] += 1
+    op = sop.op
+    telemetry.count_trace("matfree", op.static, op.spec,
+                          backend=f"sharded_{op.store}")
+    (inner, rebuild, cd, seg, n_seg, geo, geo_specs, leaves_p, leaf_specs,
+     routing) = _shard_scaffold(sop)
+    axis_name = sop.axis_name
+    n_geo = len(geo)
+
+    if op.free_mask is not None:
+        m = op.free_mask.astype(x.dtype)
+        x_in = m * x
+    else:
+        x_in = x
+
+    def body(x_rep, cd_s, seg_s, *rest):
+        op_s = rebuild(inner, rest[:n_geo], rest[n_geo:])
+        xe = x_rep[cd_s]                               # shard-local gather
+        y_local = op_s._local_apply(xe, transpose)     # per-element action
+        part = jax.ops.segment_sum(
+            y_local.reshape(-1), seg_s.reshape(-1), num_segments=n_seg
+        )
+        return jax.lax.psum(part, axis_name)
+
+    shard = P(axis_name)
+    sharded = shard_map(
+        body, mesh=sop.mesh,
+        in_specs=(P(), shard, shard) + geo_specs + leaf_specs,
+        out_specs=P(),
+        check_rep=False,
+    )
+    with annotate("tg.matfree.sharded_apply"):
+        packed = sharded(x_in, cd, seg, *geo, *leaves_p)
+    out = jnp.zeros((routing.num_dofs,), dtype=packed.dtype)
+    y = out.at[routing.touched_dev].set(packed)
+    if op.free_mask is not None:
+        y = m * y + (1.0 - m) * x
+    return y
+
+
+def _sharded_mf_diag_impl(sop: ShardedMatFreeOperator):
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    op = sop.op
+    (inner, rebuild, cd, seg, n_seg, geo, geo_specs, leaves_p, leaf_specs,
+     routing) = _shard_scaffold(sop)
+    axis_name = sop.axis_name
+    n_geo = len(geo)
+
+    def body(seg_s, *rest):
+        op_s = rebuild(inner, rest[:n_geo], rest[n_geo:])
+        d_local = op_s._diag_local()
+        part = jax.ops.segment_sum(
+            d_local.reshape(-1), seg_s.reshape(-1), num_segments=n_seg
+        )
+        return jax.lax.psum(part, axis_name)
+
+    shard = P(axis_name)
+    sharded = shard_map(
+        body, mesh=sop.mesh,
+        in_specs=(shard,) + geo_specs + leaf_specs,
+        out_specs=P(),
+        check_rep=False,
+    )
+    packed = sharded(seg, *geo, *leaves_p)
+    out = jnp.zeros((routing.num_dofs,), dtype=packed.dtype)
+    diag = out.at[routing.touched_dev].set(packed)
+    if op.free_mask is not None:
+        m = op.free_mask.astype(diag.dtype)
+        diag = m * diag + (1.0 - m)
+    return diag
+
+
+@partial(jax.jit, static_argnums=(2,))
+def _sharded_apply_jit(sop: ShardedMatFreeOperator, x, transpose: bool):
+    return _sharded_mf_impl(sop, x, transpose)
+
+
+@jax.jit
+def _sharded_diag_jit(sop: ShardedMatFreeOperator):
+    return _sharded_mf_diag_impl(sop)
 
 
 # ---------------------------------------------------------------------------

@@ -276,7 +276,9 @@ def ell_layout(csr: CSR) -> tuple[np.ndarray, np.ndarray, int]:
     n = csr.shape[0]
     counts = np.diff(csr.indptr)
     L = int(counts.max()) if counts.size else 1
-    cols = np.repeat(np.arange(n)[:, None], L, axis=1)  # pad with row idx
+    # int32 at staging time: the Pallas kernels index with int32, and casting
+    # here (once per pattern) removes the per-matvec convert from solve loops
+    cols = np.repeat(np.arange(n, dtype=np.int32)[:, None], L, axis=1)
     slot = np.concatenate([np.arange(c) for c in counts]) if counts.size else np.array([], np.int64)
     rows_of = np.asarray(csr.row_of_nnz)
     cols[rows_of, slot] = np.asarray(csr.indices)

@@ -90,15 +90,21 @@ class _ProblemBase:
         return (res, info) if return_info else res
 
     def _solve_matfree(self, form, load, tol=1e-10, maxiter=10000,
-                       dirichlet_values=0.0, return_info=False):
+                       dirichlet_values=0.0, return_info=False,
+                       sharded=False):
         """Matrix-free Krylov solve: the operator applies ``form`` straight
         from the plan (element-local Map → per-element action →
         scatter-Reduce), Jacobi from a diagonal-only assembly, Dirichlet
         condensation as an apply wrapper (the RHS lift runs one matrix-free
         apply of the uncondensed operator) — global CSR values are never
-        materialized.  (For a *differentiable* matrix-free solve use
+        materialized.  ``sharded=True`` partitions every apply (including
+        the Jacobi diagonal assembly and the RHS lift) over the local device
+        mesh, so one Krylov solve spans all devices.  (For a
+        *differentiable* matrix-free solve use
         :func:`repro.core.matfree_solve` on the same operator.)"""
         op_full = matfree_operator(self.plan, form)
+        if sharded:
+            op_full = op_full.sharded()
         op = op_full.condensed(self.bc)
         if isinstance(dirichlet_values, (int, float)) and dirichlet_values == 0.0:
             # homogeneous: the lift reduces to masking — skip the dead
@@ -113,9 +119,10 @@ class _ProblemBase:
         where = f"{type(self).__name__}.solve"
         events.check_convergence(info, where=where)
         if telemetry.is_enabled():
-            events.record_solve(where, info, method=self.method,
-                                backend="matfree",
-                                wall_us=(time.perf_counter() - t0) * 1e6)
+            events.record_solve(
+                where, info, method=self.method,
+                backend="matfree_sharded" if sharded else "matfree",
+                wall_us=(time.perf_counter() - t0) * 1e6)
         rel = float(jnp.linalg.norm(op.matvec(u) - f) / jnp.linalg.norm(f))
         res = _SolveResult(u, int(info.iters), rel, bool(info.converged))
         return (res, info) if return_info else res
@@ -138,13 +145,15 @@ class PoissonProblem(_ProblemBase):
     def solve(self, rho=None, f=1.0, tol=1e-10, backend=None,
               return_info=False):
         """Solve with a registry-selected matvec backend; ``"matfree"``
-        skips matrix assembly entirely (only the RHS vector is assembled).
-        ``return_info=True`` appends the raw
+        skips matrix assembly entirely (only the RHS vector is assembled)
+        and ``"matfree_sharded"`` additionally spans the solve over all
+        local devices.  ``return_info=True`` appends the raw
         :class:`~repro.core.solvers.SolveInfo`."""
-        if backend == "matfree":
+        if backend in ("matfree", "matfree_sharded"):
             load = self.asm.assemble_rhs(wf.source(f))
             return self._solve_matfree(wf.diffusion(rho), load, tol,
-                                       return_info=return_info)
+                                       return_info=return_info,
+                                       sharded=backend == "matfree_sharded")
         k, load = self.assemble(rho, f)
         return self._solve_system(k, load, tol, backend=backend,
                                   return_info=return_info)
@@ -209,12 +218,13 @@ class AdvectionDiffusionProblem(_ProblemBase):
 
     def solve(self, eps=1.0, beta=(1.0, 0.0), f=1.0, dirichlet_values=0.0,
               tol=1e-10, backend=None, return_info=False):
-        if backend == "matfree":
+        if backend in ("matfree", "matfree_sharded"):
             form = wf.diffusion(eps) + wf.advection(jnp.asarray(beta))
             load = self.asm.assemble_rhs(wf.source(f))
             return self._solve_matfree(form, load, tol,
                                        dirichlet_values=dirichlet_values,
-                                       return_info=return_info)
+                                       return_info=return_info,
+                                       sharded=backend == "matfree_sharded")
         k, load = self.assemble(eps, beta, f, dirichlet_values)
         return self._solve_system(k, load, tol, backend=backend,
                                   return_info=return_info)
@@ -243,13 +253,14 @@ class ElasticityProblem(_ProblemBase):
 
     def solve(self, body_force=None, tol=1e-10, backend=None,
               return_info=False):
-        if backend == "matfree":
+        if backend in ("matfree", "matfree_sharded"):
             d = self.mesh.dim
             bf = jnp.ones(d) if body_force is None else jnp.asarray(body_force)
             load = self.asm.assemble_rhs(wf.source(bf))
             return self._solve_matfree(
                 wf.elasticity(self.lam, self.mu), load, tol,
                 return_info=return_info,
+                sharded=backend == "matfree_sharded",
             )
         k, f = self.assemble(body_force)
         return self._solve_system(k, f, tol, backend=backend,
@@ -302,11 +313,11 @@ class MixedBCPoisson(_ProblemBase):
     def solve(self, f, g_neumann=None, robin_alpha=1.0, g_robin=None,
               dirichlet_values=None, rho=None, tol=1e-10, backend=None,
               return_info=False):
-        if backend == "matfree":
+        if backend in ("matfree", "matfree_sharded"):
             raise NotImplementedError(
                 "MixedBCPoisson has Robin facet terms, which the matrix-free "
                 "apply does not support (volume terms only) — use an "
-                "assembled backend ('csr'/'ell'/'ell_pallas')"
+                "assembled backend ('csr'/'ell'/'ell_pallas'/'ell_stream')"
             )
         # mixed volume + boundary form → ONE CSR from one fused assembly
         # (Robin facet terms inject into the volume pattern), and one fused

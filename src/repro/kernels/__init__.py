@@ -1,1 +1,8 @@
-from .ops import batch_map_stiffness, ell_matvec, ell_residual  # noqa: F401
+from .ops import (  # noqa: F401
+    autotune_ell_stream,
+    batch_map_stiffness,
+    ell_matvec,
+    ell_matvec_stream,
+    ell_residual,
+    ell_residual_stream,
+)

@@ -1,22 +1,36 @@
 """Public jit'd wrappers for the Pallas kernels, with backend dispatch.
 
-``interpret=True`` (Python interpretation of the kernel body) is used on CPU
-for validation; on a real TPU backend the same ``pallas_call`` lowers to
-Mosaic.  The wrappers auto-select unless forced.
+``interpret`` resolves inside :mod:`repro.kernels.spmv_ell` from the active
+JAX backend (Mosaic on TPU, the DMA-emulating interpreter elsewhere), with
+``REPRO_PALLAS_INTERPRET`` / per-call ``interpret=`` overrides.
+
+Two SpMV memory plans back the ELL operators (kernel module docstring):
+the broadcast plan (:func:`ell_matvec`) replicates ``x`` into VMEM per row
+block — fastest while N fits; the streaming plan (:func:`ell_matvec_stream`)
+keeps every operand HBM-resident with double-buffered DMA — VMEM use is
+independent of N, so million-DOF solves fit.
 """
 
 from __future__ import annotations
 
-import jax
-
 from .local_assembly import local_stiffness_p1
-from .spmv_ell import galerkin_residual_ell, spmv_ell
+from .spmv_ell import (
+    _interpret_default,
+    autotune_stream,
+    galerkin_residual_ell,
+    galerkin_residual_ell_stream,
+    spmv_ell,
+    spmv_ell_stream,
+)
 
-__all__ = ["batch_map_stiffness", "ell_matvec", "ell_residual"]
-
-
-def _interpret_default() -> bool:
-    return jax.default_backend() != "tpu"
+__all__ = [
+    "batch_map_stiffness",
+    "ell_matvec",
+    "ell_residual",
+    "ell_matvec_stream",
+    "ell_residual_stream",
+    "autotune_ell_stream",
+]
 
 
 def batch_map_stiffness(coords, rho, *, interpret: bool | None = None):
@@ -25,23 +39,43 @@ def batch_map_stiffness(coords, rho, *, interpret: bool | None = None):
     return local_stiffness_p1(coords, rho, interpret=itp)
 
 
-def _cols_dev(cols):
-    # stage the static column table once per layout (the core's device-mirror
-    # cache), not per call — an (N, L) host→device transfer on every matvec
-    # of a solve loop otherwise dominates the kernel itself
-    from ..core.sparse import _dev
-
-    return _dev(cols)
-
-
 def ell_matvec(ell, x, *, interpret: bool | None = None):
-    """SpMV on a :class:`repro.core.sparse.ELL` operator."""
-    itp = _interpret_default() if interpret is None else interpret
+    """SpMV on a :class:`repro.core.sparse.ELL` operator (broadcast plan).
 
-    return spmv_ell(ell.vals, _cols_dev(ell.cols), x, interpret=itp)
+    The static column table is staged (int32 cast + block padding + device
+    transfer) once per layout inside the kernel module's id-keyed cache."""
+    return spmv_ell(ell.vals, ell.cols, x, interpret=interpret)
 
 
 def ell_residual(ell, u, f, *, interpret: bool | None = None):
-    itp = _interpret_default() if interpret is None else interpret
+    return galerkin_residual_ell(ell.vals, ell.cols, u, f, interpret=interpret)
 
-    return galerkin_residual_ell(ell.vals, _cols_dev(ell.cols), u, f, interpret=itp)
+
+def ell_matvec_stream(ell, x, *, interpret: bool | None = None,
+                      block_n: int | None = None, nbuf: int | None = None):
+    """Streaming SpMV on an ELL operator: HBM-resident ``x``, double-buffered
+    ``vals``/``cols`` row blocks — N bounded by HBM, not VMEM."""
+    kw = {}
+    if block_n is not None:
+        kw["block_n"] = block_n
+    if nbuf is not None:
+        kw["nbuf"] = nbuf
+    return spmv_ell_stream(ell.vals, ell.cols, x, interpret=interpret, **kw)
+
+
+def ell_residual_stream(ell, u, f, *, interpret: bool | None = None,
+                        block_n: int | None = None, nbuf: int | None = None):
+    """Fused streaming residual ``r = K·u − f`` on an ELL operator."""
+    kw = {}
+    if block_n is not None:
+        kw["block_n"] = block_n
+    if nbuf is not None:
+        kw["nbuf"] = nbuf
+    return galerkin_residual_ell_stream(ell.vals, ell.cols, u, f,
+                                        interpret=interpret, **kw)
+
+
+def autotune_ell_stream(ell, x, **kw):
+    """Pick the fastest ``(block_n, nbuf)`` for this layout by measurement —
+    results are cached and recorded through :mod:`repro.telemetry`."""
+    return autotune_stream(ell.vals, ell.cols, x, **kw)

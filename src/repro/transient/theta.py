@@ -59,7 +59,10 @@ class ThetaIntegrator:
     (build via :meth:`from_form` with ``backend="matfree"``) steps on
     matrix-free operators through the differentiable
     :func:`~repro.core.solvers.matfree_solve` — no CSR values are ever
-    materialized for the rollout.
+    materialized for the rollout; ``"matfree_sharded"`` additionally
+    partitions every apply over the local device mesh
+    (:meth:`~repro.core.operator.MatFreeOperator.sharded`), so each step's
+    solve — and its adjoint — spans all devices.
     """
 
     mass: CSR | None
@@ -83,13 +86,22 @@ class ThetaIntegrator:
             self.rhs_op = axpy_csr(
                 1.0, self.mass, -(1.0 - self.theta) * self.dt, self.stiff
             )
+        if self.backend == "matfree_sharded":
+            from ..core.operator import MatFreeOperator
+
+            # partition both effective applies over the device mesh; every
+            # step's solve (and its adjoint) then spans all local devices
+            if isinstance(self.lhs_full, MatFreeOperator):
+                self.lhs_full = self.lhs_full.sharded()
+            if isinstance(self.rhs_op, MatFreeOperator):
+                self.rhs_op = self.rhs_op.sharded()
         if self.bc is None:
             self.lhs = self.lhs_full
         elif isinstance(self.lhs_full, CSR):
             self.lhs = self.bc.apply_matrix_only(self.lhs_full)
         else:  # matrix-free operator: condensation as an apply wrapper
             self.lhs = self.lhs_full.condensed(self.bc)
-        if self.backend not in ("csr", "matfree"):
+        if self.backend not in ("csr", "matfree", "matfree_sharded"):
             self._lhs_mv = make_matvec(self.lhs, self.backend)
             self._rhs_mv = make_matvec(self.rhs_op, self.backend)
             self._precond = jacobi_preconditioner(self.lhs)
@@ -122,9 +134,10 @@ class ThetaIntegrator:
         )
         lhs_form = wf.mass(mass_coeff) + (theta * dt) * form
         rhs_form = wf.mass(mass_coeff) + (-(1.0 - theta) * dt) * form
-        if kw.get("backend") == "matfree":
+        if kw.get("backend") in ("matfree", "matfree_sharded"):
             from ..core.operator import matfree_operator
 
+            # matfree_sharded: __post_init__ wraps both in the sharded apply
             lhs = matfree_operator(asm.plan, lhs_form)
             rhs = matfree_operator(asm.plan, rhs_form)
         else:
@@ -142,7 +155,7 @@ class ThetaIntegrator:
         ``return_info=True`` additionally returns the step's
         :class:`~repro.core.solvers.SolveInfo` as a non-differentiated
         auxiliary output (stop-gradient leaves)."""
-        if self.backend in ("csr", "matfree"):
+        if self.backend in ("csr", "matfree", "matfree_sharded"):
             b = self.rhs_op.matvec(u)
         else:
             b = self._rhs_mv(u)
@@ -162,8 +175,9 @@ class ThetaIntegrator:
                 self.lhs, b, self.solver, self.tol, self.tol, self.maxiter,
                 return_info=return_info,
             )
-        if self.backend == "matfree":
+        if self.backend in ("matfree", "matfree_sharded"):
             # differentiable adjoint solve on the matrix-free operator
+            # (sharded: the same solve with every apply spanning the mesh)
             return matfree_solve(
                 self.lhs, b, self.solver, self.tol, self.tol, self.maxiter,
                 return_info=return_info,

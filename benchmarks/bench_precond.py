@@ -1,0 +1,121 @@
+"""Preconditioner and static-condensation benchmark (repro.core.elemalg).
+
+Two tracked claims of the element tensor-algebra layer:
+
+* the matrix-free EbE (element-by-element additive Schwarz) and Chebyshev
+  polynomial preconditioners cut CG iteration counts below Jacobi on the
+  anisotropic Poisson problem while materializing no global matrix — each
+  row carries ``iters`` next to the wall time per solve;
+* static condensation of a P2 Poisson system runs the Krylov loop on a
+  strictly smaller interface system with strictly fewer outer iterations
+  than the full-system CG, at solution parity.
+
+Rows (perf-smoke CI gates these against ``BENCH_baseline.json``):
+  precond_{jacobi,ebe,chebyshev}_{tag} — one preconditioned CG solve
+  condensed_solve_{tag} / full_solve_{tag} — P2 condensation vs full system
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from .common import emit_json, is_quick, time_fn
+except ImportError:  # flat execution
+    from common import emit_json, is_quick, time_fn
+
+from repro.core import (
+    DirichletCondenser,
+    FunctionSpace,
+    GalerkinAssembler,
+    SolverSpec,
+    condensed_solve,
+    matfree_operator,
+    matfree_solve,
+    unit_square_tri,
+    vertex_split,
+    weakform as wf,
+)
+from repro.core.mesh import element_for_mesh
+
+
+def _setup(n, degree, form):
+    mesh = unit_square_tri(n)
+    space = FunctionSpace(mesh, element_for_mesh(mesh, degree))
+    asm = GalerkinAssembler(space)
+    bc = DirichletCondenser(asm, space.boundary_dofs())
+    op = matfree_operator(asm.plan, form).condensed(bc)
+    f = bc.project_residual(asm.assemble_rhs(wf.source(1.0)))
+    return space, op, f
+
+
+def _precond_case(n, tag):
+    """Anisotropic Poisson: A = diag(100, 1) — the conditioning stressor
+    the EbE/Chebyshev preconditioners were tuned on."""
+    a = jnp.asarray(np.diag([100.0, 1.0]))
+    space, op, f = _setup(n, 1, wf.anisotropic_diffusion(a))
+    iters = {}
+    for name in ("jacobi", "ebe", "chebyshev"):
+        spec = SolverSpec(method="cg", tol=1e-10, atol=1e-10, maxiter=20000,
+                          precond=name)
+
+        def solve():
+            return matfree_solve(op, f, spec, return_info=True)
+
+        u, info = solve()
+        u.block_until_ready()
+        iters[name] = int(info.iters)
+        t = time_fn(lambda: solve()[0], warmup=2, iters=5)
+        emit_json(
+            f"precond_{name}_{tag}", t,
+            f"iters={iters[name]};dofs={space.num_dofs}",
+            dofs=space.num_dofs, iters=iters[name], precond=name,
+        )
+    # the layer's contract: both element-algebra preconditioners beat Jacobi
+    assert iters["ebe"] < iters["jacobi"], iters
+    assert iters["chebyshev"] < iters["jacobi"], iters
+
+
+def _condensation_case(n, tag):
+    space, op, f = _setup(n, 2, wf.diffusion(1.0))
+    split = vertex_split(space)
+    spec = SolverSpec(method="cg", tol=1e-10, atol=1e-10, maxiter=20000)
+
+    def full():
+        return matfree_solve(op, f, spec, return_info=True)
+
+    def cond():
+        return condensed_solve(op, f, spec, split=split, return_info=True)
+
+    u_full, info_full = full()
+    u_cond, info_cond = cond()
+    parity = float(jnp.max(jnp.abs(u_cond - u_full)))
+    assert parity < 1e-8, parity
+    nb = int(np.asarray(split.interface_mask).sum())
+    t_full = time_fn(lambda: full()[0], warmup=2, iters=5)
+    t_cond = time_fn(lambda: cond()[0], warmup=2, iters=5)
+    emit_json(
+        f"full_solve_{tag}", t_full,
+        f"iters={int(info_full.iters)};dofs={space.num_dofs}",
+        dofs=space.num_dofs, iters=int(info_full.iters),
+    )
+    emit_json(
+        f"condensed_solve_{tag}", t_cond,
+        f"iters={int(info_cond.iters)};interface_dofs={nb}",
+        dofs=space.num_dofs, interface_dofs=nb, iters=int(info_cond.iters),
+        parity=parity,
+    )
+    assert int(info_cond.iters) < int(info_full.iters)
+    assert nb < space.num_dofs
+
+
+def main():
+    if is_quick():
+        _precond_case(24, "aniso_24")
+        _condensation_case(12, "p2_12")
+    else:
+        _precond_case(64, "aniso_64")
+        _condensation_case(32, "p2_32")
+
+
+if __name__ == "__main__":
+    main()

@@ -14,6 +14,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  Module → paper artifact map:
   bench_weakform           — fused multi-term WeakForm assemble vs separate+add
   bench_batched_assembly   — vmap-batched multi-instance assembly vs B singles
   bench_matfree            — matrix-free apply/solve vs assembled CSR
+  bench_precond            — elemalg preconditioners + static condensation
   bench_serve              — repro.serve admission batching vs sequential
   bench_dryrun_roofline    — harness roofline table (from dry-run JSON)
 
@@ -61,6 +62,7 @@ def main(argv=None) -> None:
         bench_mixed_bc,
         bench_neural_solvers,
         bench_operator_learning,
+        bench_precond,
         bench_serve,
         bench_solver_scaling,
         bench_topo_opt,
@@ -82,6 +84,7 @@ def main(argv=None) -> None:
         bench_weakform,
         bench_batched_assembly,
         bench_matfree,
+        bench_precond,
         bench_serve,
         bench_dryrun_roofline,
     ]

@@ -56,14 +56,39 @@ from .operator import (  # noqa: E402,F401
     n_matfree_traces,
 )
 from .solvers import (  # noqa: E402,F401
+    SolveInfo,
+    SolverSpec,
     bicgstab,
     cg,
     jacobi_preconditioner,
+    make_preconditioner,
     matfree_solve,
     matfree_solve_batched,
+    register_preconditioner,
+    resolve_solver_spec,
     sparse_solve,
     sparse_solve_batched,
 )
-from .sparse import CSR, ELL, BatchedCSR, csr_to_ell, ell_layout  # noqa: E402,F401
+from . import elemalg  # noqa: E402,F401  (registers ebe/chebyshev preconds)
+from .elemalg import (  # noqa: E402,F401
+    DofSplit,
+    ElementFactors,
+    block_partition,
+    chebyshev_preconditioner,
+    condense,
+    condensed_solve,
+    dof_split,
+    ebe_preconditioner,
+    factorize,
+    vertex_split,
+)
+from .sparse import (  # noqa: E402,F401
+    CSR,
+    ELL,
+    BatchedCSR,
+    cached_diagonal,
+    csr_to_ell,
+    ell_layout,
+)
 from . import weakform  # noqa: E402,F401
 from .weakform import WeakForm  # noqa: E402,F401

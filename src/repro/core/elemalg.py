@@ -1,0 +1,632 @@
+"""Element tensor-algebra layer: dense local algebra on ``(E, k, k)`` tensors.
+
+TensorGalerkin's Map stage materializes every per-element tensor ``K_e``
+on-device; the global solvers normally consume them only through a flat
+scatter (assembly) or a gather→action→scatter apply (matrix-free).  This
+module — the JAX analogue of Firedrake's Slate — treats the same tensors as
+a *batch of dense matrices* and does linear algebra on them directly:
+
+* :func:`factorize` / :class:`ElementFactors` — batched Cholesky (kernels
+  declared ``spd`` in :data:`repro.core.weakform.KERNELS`) or LU (advection,
+  general anisotropic tensors) over all E elements at once, with
+  :meth:`ElementFactors.solve` back-substitution.
+* :func:`block_partition` — static row/column sub-blocks ``K_e[rows, cols]``.
+* **Static condensation** (:func:`vertex_split` → :func:`condense` →
+  :func:`condensed_solve`): split the higher-order (edge/bubble) DOFs of a
+  P2/P3 space from the vertex interface DOFs and solve the Schur complement
+  ``S = K_bb − K_bi K_ii⁻¹ K_ib`` on the interface only — a strictly
+  smaller global system with better conditioning (for P2 the interface is
+  ~1/4 of the DOFs), applied entirely through per-element blocks (no global
+  matrix), with exact recovery of the interior unknowns and ``custom_vjp``
+  gradients identical to the uncondensed adjoint.
+* Two matrix-free **preconditioners**, registered into the
+  :func:`repro.core.solvers.register_preconditioner` registry on import:
+
+  - ``"ebe"`` (:func:`ebe_preconditioner`): element-by-element additive
+    Schwarz — the diagonally-scaled, regularized element matrices
+    ``C_e = I + s K_e s`` (``s = diag(A)^{-1/2}``) are Cholesky/LU-factorized
+    once, and each application solves all E local systems batched and
+    scatters through the existing vector routing.  Never forms a global
+    matrix; SPD by construction, so CG-safe.
+  - ``"chebyshev"`` (:func:`chebyshev_preconditioner`): a fixed-degree
+    Chebyshev polynomial in ``D⁻¹A`` over an eigenvalue window estimated by
+    a few power iterations (run once at factory time, before the Krylov
+    ``while_loop``).  Works for any operator with ``matvec``/``diagonal``
+    (CSR included); costs ``degree`` extra matvecs per application and cuts
+    the CG iteration count by roughly that factor.
+
+Everything here is trace-compatible and differentiable; nothing ever
+materializes a global matrix, so the ``operator_state_bytes`` gauge of a
+matrix-free solve is unchanged by preconditioning.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..telemetry import events
+from .assembly import reduce_vector
+from .solvers import (
+    SolverSpec,
+    _info_aux,
+    _method,
+    register_preconditioner,
+)
+from .sparse import _dev, cached_diagonal
+
+__all__ = [
+    "ElementFactors",
+    "factorize",
+    "block_partition",
+    "masked_element_matrices",
+    "DofSplit",
+    "dof_split",
+    "vertex_split",
+    "CondensedSystem",
+    "condense",
+    "condensed_solve",
+    "ebe_preconditioner",
+    "chebyshev_preconditioner",
+]
+
+
+# ---------------------------------------------------------------------------
+# Batched factorize / solve / block-partition primitives
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class ElementFactors:
+    """A batched factorization of ``(E, k, k)`` element tensors.
+
+    ``piv is None`` ⇒ Cholesky factors (lower-triangular ``(E, k, k)``);
+    otherwise LU factors with ``(E, k)`` pivots.  A pytree, so factors can
+    cross jit/vmap boundaries."""
+
+    data: jnp.ndarray
+    piv: jnp.ndarray | None = None
+
+    def tree_flatten(self):
+        return (self.data, self.piv), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def is_cholesky(self) -> bool:
+        return self.piv is None
+
+    def solve(self, rhs: jnp.ndarray) -> jnp.ndarray:
+        """Back-substitute all E local systems at once: ``rhs`` is ``(E, k)``
+        or ``(E, k, m)``; returns the same shape."""
+        vec = rhs.ndim == 2
+        r = rhs[..., None] if vec else rhs
+        if self.piv is None:
+            y = jax.scipy.linalg.solve_triangular(self.data, r, lower=True)
+            x = jax.scipy.linalg.solve_triangular(
+                jnp.swapaxes(self.data, -1, -2), y, lower=False
+            )
+        else:
+            x = jax.vmap(
+                lambda lu, piv, b: jax.scipy.linalg.lu_solve((lu, piv), b)
+            )(self.data, self.piv, r)
+        return x[..., 0] if vec else x
+
+
+def factorize(k_e: jnp.ndarray, spd: bool = False) -> ElementFactors:
+    """Factorize a batch of element tensors: Cholesky when ``spd`` (the
+    kernel-declared route — diffusion/mass/elasticity), batched LU with
+    partial pivoting otherwise (advection, general anisotropic tensors)."""
+    if spd:
+        return ElementFactors(jnp.linalg.cholesky(k_e), None)
+    lu, piv = jax.vmap(jax.scipy.linalg.lu_factor)(k_e)
+    return ElementFactors(lu, piv)
+
+
+def block_partition(k_e: jnp.ndarray, rows, cols=None) -> jnp.ndarray:
+    """The static sub-block ``K_e[rows, cols]`` of every element tensor —
+    ``rows``/``cols`` are local-slot index arrays (``cols`` defaults to
+    ``rows``).  Returns ``(E, len(rows), len(cols))``."""
+    rows = np.asarray(rows)
+    cols = rows if cols is None else np.asarray(cols)
+    return k_e[:, rows[:, None], cols[None, :]]
+
+
+def masked_element_matrices(op) -> jnp.ndarray:
+    """``op.element_matrices()`` with Dirichlet rows/columns zeroed per the
+    operator's ``free_mask`` (matching the condensed apply's
+    ``y = m·A(m·x) + (1−m)·x`` up to the unit diagonal, which callers
+    reinstate globally)."""
+    base = op if hasattr(op, "element_matrices") else getattr(op, "op", op)
+    k_e = base.element_matrices()
+    fm = getattr(base, "free_mask", None)
+    if fm is None:
+        return k_e
+    me = fm.astype(k_e.dtype)[_dev(base.static.cell_dofs)]
+    return k_e * me[:, :, None] * me[:, None, :]
+
+
+def _base_op(op):
+    """Unwrap to the element-tensor-bearing operator (a sharded wrapper
+    delegates to its inner MatFreeOperator)."""
+    if hasattr(op, "element_matrices"):
+        return op
+    inner = getattr(op, "op", None)
+    if inner is not None and hasattr(inner, "element_matrices"):
+        return inner
+    raise TypeError(
+        f"{type(op).__name__} carries no element tensors — element-level "
+        "algebra (ebe preconditioner, static condensation) needs a "
+        "matrix-free operator (repro.core.matfree_operator); assembled CSR "
+        "solves can use precond='jacobi' or 'chebyshev'"
+    )
+
+
+# ---------------------------------------------------------------------------
+# Static condensation: interface/interior split + Schur-complement system
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class DofSplit:
+    """An interface/interior partition of a space's DOFs that is *uniform in
+    local slots*: every element sees the same local slots as interface
+    (kept in the condensed system) and interior (eliminated).  Identity-
+    hashed (``eq=False``) so it can ride as a jit static argument."""
+
+    interface_mask: np.ndarray   # (n,) bool — True = interface DOF
+    interface_slots: np.ndarray  # (kb,) local slots holding interface DOFs
+    interior_slots: np.ndarray   # (ki,) local slots holding interior DOFs
+
+
+def dof_split(cell_dofs, interface_mask) -> DofSplit:
+    """Build a :class:`DofSplit` from the element DOF map and a boolean
+    interface mask, checking the split is slot-uniform across elements
+    (true for the vertex/higher-order split of any nodal element here)."""
+    cd = np.asarray(cell_dofs)
+    im = np.asarray(interface_mask, dtype=bool)
+    slot_if = im[cd]                      # (E, k)
+    col_if = slot_if.all(axis=0)
+    col_in = (~slot_if).all(axis=0)
+    if not (col_if | col_in).all():
+        bad = np.where(~(col_if | col_in))[0]
+        raise ValueError(
+            f"interface split is not slot-uniform: local slots {bad.tolist()} "
+            "mix interface and interior DOFs across elements"
+        )
+    if not col_in.any():
+        raise ValueError(
+            "no interior DOFs to condense — static condensation needs a "
+            "degree ≥ 2 space (P2/P3: edge/bubble DOFs)"
+        )
+    return DofSplit(im, np.where(col_if)[0], np.where(col_in)[0])
+
+
+def vertex_split(space) -> DofSplit:
+    """The canonical condensation split of a P2/P3 space: vertex DOFs are
+    the interface, every higher-order (edge/bubble) DOF is interior."""
+    nv = space.mesh.num_vertices
+    v = space.value_size
+    im = (np.arange(space.num_dofs) // v) < nv
+    return dof_split(space.cell_dofs, im)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class _Scaffold:
+    """Host-built static tables of one condensed system: compact interface/
+    interior numberings and the per-element gather maps into them (index
+    ``nb``/``ni`` is the padding segment for Dirichlet-constrained DOFs,
+    whose element rows/columns are already masked to zero)."""
+
+    cell_b: np.ndarray        # (E, kb) compact interface ids, nb = padding
+    cell_i: np.ndarray        # (E, ki) compact interior ids, ni = padding
+    interface_dofs: np.ndarray  # (nb,) global ids of free interface DOFs
+    interior_dofs: np.ndarray   # (ni,) global ids of free interior DOFs
+    nb: int
+    ni: int
+    n: int
+
+
+def _build_scaffold(static, split: DofSplit, free_mask) -> _Scaffold:
+    cd = np.asarray(static.cell_dofs)
+    n = static.num_dofs
+    free = (
+        np.ones(n, dtype=bool) if free_mask is None
+        else np.asarray(free_mask) > 0
+    )
+    b_dofs = np.where(split.interface_mask & free)[0]
+    i_dofs = np.where(~split.interface_mask & free)[0]
+    nb, ni = b_dofs.shape[0], i_dofs.shape[0]
+    lut_b = np.full(n, nb, dtype=np.int64)
+    lut_b[b_dofs] = np.arange(nb)
+    lut_i = np.full(n, ni, dtype=np.int64)
+    lut_i[i_dofs] = np.arange(ni)
+    return _Scaffold(
+        cell_b=lut_b[cd[:, split.interface_slots]],
+        cell_i=lut_i[cd[:, split.interior_slots]],
+        interface_dofs=b_dofs, interior_dofs=i_dofs, nb=nb, ni=ni, n=n,
+    )
+
+
+# scaffold per (plan static, split, bc mask) identity — strong refs keep the
+# keys alive so ids cannot be recycled, same idiom as sparse._DEVICE_MIRRORS
+_SCAFFOLDS: dict[tuple, tuple] = {}
+_SCAFFOLDS_LIMIT = 64
+
+
+def _scaffold(op, split: DofSplit) -> _Scaffold:
+    key = (id(op.static), id(split), id(op.free_mask))
+    hit = _SCAFFOLDS.get(key)
+    if hit is not None:
+        return hit[1]
+    sc = _build_scaffold(op.static, split, op.free_mask)
+    while len(_SCAFFOLDS) >= _SCAFFOLDS_LIMIT:
+        _SCAFFOLDS.pop(next(iter(_SCAFFOLDS)))
+    _SCAFFOLDS[key] = ((op.static, split, op.free_mask), sc)
+    return sc
+
+
+def _gather(x, idx_dev):
+    """Pad-gather: compact vector + one trailing zero, indexed by a map that
+    sends constrained DOFs to the padding slot."""
+    return jnp.concatenate([x, jnp.zeros((1,), x.dtype)])[idx_dev]
+
+
+def _scatter(y_local, idx_dev, num):
+    out = jax.ops.segment_sum(
+        y_local.reshape(-1), idx_dev.reshape(-1), num_segments=num + 1
+    )
+    return out[:num]
+
+
+_INNER_DEFAULT = SolverSpec(method="cg", tol=1e-12, atol=1e-12, maxiter=2000,
+                            precond="jacobi")
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class CondensedSystem:
+    """The interface Schur-complement system of a matrix-free operator,
+    applied entirely through per-element blocks.
+
+    ``S x_b = (K_bb − K_bi K_ii⁻¹ K_ib) x_b`` where every block apply is a
+    gather → batched ``(E, ·, ·)`` block product → compact scatter, and
+    ``K_ii⁻¹`` is an inner CG on the (well-conditioned, for P2 the
+    edge-edge block) interior system — preconditioned element-by-element
+    with the Cholesky/LU-factorized interior blocks.  Nothing global is
+    ever formed; ``shape`` is ``(nb, nb)`` with ``nb < n``.
+    """
+
+    op: object                 # the (bc-condensed) MatFreeOperator
+    split: DofSplit
+    kbb: jnp.ndarray           # (E, kb, kb)
+    kbi: jnp.ndarray           # (E, kb, ki)
+    kib: jnp.ndarray           # (E, ki, kb)
+    kii: jnp.ndarray           # (E, ki, ki)
+    ii_factors: ElementFactors  # factorized regularized interior blocks
+    diag_b: jnp.ndarray        # (nb,) assembled interface diagonal
+    diag_i: jnp.ndarray        # (ni,) assembled interior diagonal
+    sc: _Scaffold
+    inner: SolverSpec
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return (self.sc.nb, self.sc.nb)
+
+    @property
+    def full_shape(self) -> tuple[int, int]:
+        return (self.sc.n, self.sc.n)
+
+    # -- block applies ----------------------------------------------------
+    def _apply_block(self, block, x, idx_in, idx_out, num_out):
+        xe = _gather(x, idx_in)
+        ye = jnp.einsum("eab,eb->ea", block, xe)
+        return _scatter(ye, idx_out, num_out)
+
+    def kbb_matvec(self, xb):
+        cb = _dev(self.sc.cell_b)
+        return self._apply_block(self.kbb, xb, cb, cb, self.sc.nb)
+
+    def kii_matvec(self, xi):
+        ci = _dev(self.sc.cell_i)
+        return self._apply_block(self.kii, xi, ci, ci, self.sc.ni)
+
+    def kib_matvec(self, xb):
+        return self._apply_block(
+            self.kib, xb, _dev(self.sc.cell_b), _dev(self.sc.cell_i),
+            self.sc.ni)
+
+    def kbi_matvec(self, xi):
+        return self._apply_block(
+            self.kbi, xi, _dev(self.sc.cell_i), _dev(self.sc.cell_b),
+            self.sc.nb)
+
+    # -- interior solve (inner Krylov, EbE-preconditioned) ----------------
+    def _ii_precond(self):
+        inv = jnp.where(jnp.abs(self.diag_i) > 0, 1.0 / self.diag_i, 1.0)
+        if self.inner.precond == "ebe":
+            dinv_sqrt = jnp.sqrt(jnp.abs(inv))
+            ci = _dev(self.sc.cell_i)
+            fac = self.ii_factors
+
+            def m(x):
+                xs = _gather(x * dinv_sqrt, ci)
+                return _scatter(fac.solve(xs), ci, self.sc.ni) * dinv_sqrt
+            return m
+        if self.inner.precond in ("identity", "none"):
+            return lambda x: x
+        return lambda x: inv * x  # jacobi (default)
+
+    def ii_solve(self, fi, x0=None):
+        solver = _method(self.inner.method)
+        return solver(self.kii_matvec, fi, x0, tol=self.inner.tol,
+                      atol=self.inner.atol, maxiter=self.inner.maxiter,
+                      m=self._ii_precond())
+
+    # -- the Schur apply --------------------------------------------------
+    def matvec(self, xb):
+        yi, _ = self.ii_solve(self.kib_matvec(xb))
+        return self.kbb_matvec(xb) - self.kbi_matvec(yi)
+
+    rmatvec = matvec  # condensation requires a symmetric operator
+
+    def diagonal(self):
+        # diag(K_bb): the Jacobi surrogate for diag(S) (S's true diagonal
+        # would cost nb interior solves)
+        return self.diag_b
+
+    # -- rhs reduction / interior recovery --------------------------------
+    def reduce_rhs(self, b):
+        fb = b[_dev(self.sc.interface_dofs)]
+        fi = b[_dev(self.sc.interior_dofs)]
+        wi, _ = self.ii_solve(fi)
+        return fb - self.kbi_matvec(wi)
+
+    def recover(self, xb, b):
+        """Exact interior recovery ``u_i = K_ii⁻¹ (f_i − K_ib u_b)`` and
+        re-expansion to the full DOF vector (constrained DOFs take their
+        lifted values from ``b``, matching the uncondensed condensed-operator
+        solve)."""
+        fi = b[_dev(self.sc.interior_dofs)]
+        ui, _ = self.ii_solve(fi - self.kib_matvec(xb))
+        x = jnp.zeros(self.sc.n, dtype=xb.dtype)
+        x = x.at[_dev(self.sc.interface_dofs)].set(xb)
+        x = x.at[_dev(self.sc.interior_dofs)].set(ui)
+        fm = getattr(self.op, "free_mask", None)
+        if fm is not None:
+            m = fm.astype(x.dtype)
+            x = m * x + (1.0 - m) * b
+        return x
+
+    def solve(self, b, spec: SolverSpec | None = None):
+        """Full condensed solve: reduce the rhs, run the outer Krylov on the
+        interface Schur system, recover the interior.  Returns
+        ``(x_full, SolveInfo)`` — the info counts *outer* iterations."""
+        spec = _COND_DEFAULT if spec is None else spec
+        g = self.reduce_rhs(b)
+        if spec.precond in ("identity", "none"):
+            m = lambda x: x  # noqa: E731
+        else:
+            inv = jnp.where(jnp.abs(self.diag_b) > 0, 1.0 / self.diag_b, 1.0)
+            m = lambda x: inv * x  # noqa: E731
+        xb, info = _method(spec.method)(
+            self.matvec, g, tol=spec.tol, atol=spec.atol,
+            maxiter=spec.maxiter, m=m)
+        return self.recover(xb, b), info
+
+
+_COND_DEFAULT = SolverSpec(method="cg", tol=1e-10, atol=1e-10, maxiter=10000,
+                           precond="jacobi")
+
+
+def condense(op, split: DofSplit, inner: SolverSpec | None = None,
+             transpose: bool = False) -> CondensedSystem:
+    """Build the interface Schur-complement system of ``op`` (a matrix-free
+    operator, normally already ``.condensed(bc)``) for a
+    :class:`DofSplit` — see :class:`CondensedSystem`."""
+    base = _base_op(op)
+    sc = _scaffold(base, split)
+    k_e = masked_element_matrices(base)
+    if transpose:
+        k_e = jnp.swapaxes(k_e, -1, -2)
+    bs, is_ = split.interface_slots, split.interior_slots
+    kbb = block_partition(k_e, bs)
+    kbi = block_partition(k_e, bs, is_)
+    kib = block_partition(k_e, is_, bs)
+    kii = block_partition(k_e, is_)
+    diag = cached_diagonal(base)
+    diag_b = diag[_dev(sc.interface_dofs)]
+    diag_i = diag[_dev(sc.interior_dofs)]
+    # regularized interior blocks for the inner EbE preconditioner:
+    # I + s K_ii s is symmetric positive definite whenever K_e is PSD
+    inv_i = jnp.where(jnp.abs(diag) > 0, 1.0 / jnp.abs(diag), 1.0)
+    s_e = jnp.sqrt(_gather(inv_i[_dev(sc.interior_dofs)], _dev(sc.cell_i)))
+    c_e = jnp.eye(kii.shape[-1], dtype=kii.dtype) + (
+        s_e[:, :, None] * kii * s_e[:, None, :]
+    )
+    ii_factors = factorize(c_e, spd=base.is_spd())
+    return CondensedSystem(
+        op=base, split=split, kbb=kbb, kbi=kbi, kib=kib, kii=kii,
+        ii_factors=ii_factors, diag_b=diag_b, diag_i=diag_i, sc=sc,
+        inner=_INNER_DEFAULT if inner is None else inner,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Differentiable condensed solve: same adjoint structure as matfree_solve
+# ---------------------------------------------------------------------------
+
+def _cond_impl(op, b, spec, inner, split, transpose=False):
+    return condense(op, split, inner=inner, transpose=transpose).solve(b, spec)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+def _condensed_solve(op, b, spec, inner, split, return_info):
+    x, info = _cond_impl(op, b, spec, inner, split)
+    return (x, _info_aux(info)) if return_info else x
+
+
+def _cond_fwd(op, b, spec, inner, split, return_info):
+    x, info = _cond_impl(op, b, spec, inner, split)
+    out = (x, _info_aux(info)) if return_info else x
+    return out, (op, x)
+
+
+def _cond_bwd(spec, inner, split, return_info, res, g):
+    op, x = res
+    gx = g[0] if return_info else g
+    # adjoint Aᵀλ = ḡ through the *condensed* path (A symmetric up to the
+    # element-tensor transpose, handled explicitly)
+    lam, adj_info = _cond_impl(op, gx, spec, inner, split, transpose=True)
+    events.record_solve("condensed_solve.adjoint", adj_info,
+                        method=spec.method, precond="condensed",
+                        phase="adjoint")
+    # operator cotangent exactly as matfree_solve: vjp of the full apply —
+    # independent of how the forward system was solved
+    _, pullback = jax.vjp(lambda o: o.matvec(x), op)
+    (d_op,) = pullback(-lam)
+    return (d_op, lam)
+
+
+_condensed_solve.defvjp(_cond_fwd, _cond_bwd)
+
+
+def condensed_solve(op, b, spec: SolverSpec | None = None, *,
+                    split: DofSplit | None = None, space=None,
+                    inner_spec: SolverSpec | None = None,
+                    return_info: bool = False):
+    """Solve ``A x = b`` by static condensation: eliminate the higher-order
+    interior DOFs element-wise and run the Krylov iteration on the interface
+    Schur complement only.
+
+    ``op`` is a (bc-condensed) :class:`~repro.core.operator.MatFreeOperator`
+    of a symmetric form on a degree ≥ 2 space; pass the ``split`` from
+    :func:`vertex_split`/:func:`dof_split` (or ``space=`` to derive it).
+    The solution matches the uncondensed solve to solver tolerance, interior
+    unknowns are recovered exactly through the same inner interior solves,
+    and gradients (via ``custom_vjp``) match the uncondensed adjoint path.
+    ``return_info=True`` reports *outer* interface iterations — strictly
+    fewer than the full-system CG on the same problem.
+    """
+    if split is None:
+        if space is None:
+            raise TypeError("condensed_solve needs split= (see vertex_split)"
+                            " or space=")
+        split = vertex_split(space)
+    spec = _COND_DEFAULT if spec is None else spec
+    inner = _INNER_DEFAULT if inner_spec is None else inner_spec
+    out = _condensed_solve(op, b, spec, inner, split, bool(return_info))
+    if return_info:
+        x, info = out
+        events.record_solve("condensed_solve", info, method=spec.method,
+                            backend="matfree", precond="condensed")
+        return x, info
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Element-by-element (EbE) preconditioner
+# ---------------------------------------------------------------------------
+
+def ebe_preconditioner(op, *, theta: float = 0.25):
+    """Element-by-element additive-Schwarz preconditioner from local
+    factorizations — no global matrix.
+
+    ``M⁻¹ = D^{-1/2} (Σ_e Pᵉ C_e⁻¹ Pᵉᵀ) D^{-1/2}`` with the regularized,
+    diagonally-scaled element matrices ``C_e = θI + s K_e s``
+    (``s = D^{-1/2}`` gathered per element).  ``C_e`` is symmetric positive
+    definite whenever the element tensors are PSD (the raw ``K_e`` are
+    singular — constant nullspace — which is why the ``θI`` regularization
+    is part of the classical EbE construction), so the factorization is a
+    batched Cholesky for ``spd``-declared kernels and the preconditioner is
+    SPD — CG-safe.  Smaller ``θ`` strengthens the element coupling the
+    preconditioner captures; ``θ = 0.25`` measured best across scalar/
+    vector/anisotropic test problems.  Dirichlet DOFs pass through untouched
+    (their element rows/columns are masked, the global unit diagonal is
+    reinstated)."""
+    base = _base_op(op)
+    k_e = masked_element_matrices(base)
+    d = cached_diagonal(op)
+    dinv_sqrt = jnp.sqrt(jnp.where(jnp.abs(d) > 0, 1.0 / jnp.abs(d), 1.0))
+    cd = _dev(base.static.cell_dofs)
+    s_e = dinv_sqrt[cd]
+    c_e = theta * jnp.eye(k_e.shape[-1], dtype=k_e.dtype) + (
+        s_e[:, :, None] * k_e * s_e[:, None, :]
+    )
+    fac = factorize(c_e, spd=base.is_spd())
+    st = base.static
+    fm = base.free_mask
+
+    def m(x):
+        xe = (x * dinv_sqrt)[cd]
+        y = reduce_vector(fac.solve(xe), st.vec_routing, st.reduce_mode)
+        y = y * dinv_sqrt
+        if fm is not None:
+            mask = fm.astype(x.dtype)
+            y = mask * y + (1.0 - mask) * x
+        return y
+
+    return m
+
+
+# ---------------------------------------------------------------------------
+# Chebyshev polynomial preconditioner
+# ---------------------------------------------------------------------------
+
+def chebyshev_preconditioner(op, *, degree: int = 3, power_iters: int = 10,
+                             eig_ratio: float = 30.0, safety: float = 1.05):
+    """Chebyshev polynomial preconditioner on the Jacobi-scaled operator.
+
+    ``λ_max(D⁻¹A)`` is estimated by ``power_iters`` power iterations (run
+    once here, at factory time — *before* the Krylov ``while_loop``), then
+    each application runs the degree-``degree`` Chebyshev recurrence for
+    ``A z = r`` on the eigenvalue window ``[λ_max/eig_ratio, λ_max]``: a
+    fixed polynomial ``z = p(D⁻¹A) D⁻¹ r``, hence a *linear, SPD*
+    preconditioner — CG-safe, unlike restarting an inner Krylov.  Costs
+    ``degree`` matvecs per application and needs only ``matvec`` +
+    ``diagonal``, so it works for CSR and matrix-free operators alike."""
+    d = cached_diagonal(op)
+    dinv = jnp.where(jnp.abs(d) > 0, 1.0 / d, 1.0)
+    matvec = op.matvec
+
+    # deterministic start vector, not orthogonal to the dominant eigenvector
+    n = d.shape[0]
+    v0 = jnp.ones(n, d.dtype) + 0.5 * jnp.cos(
+        jnp.arange(n, dtype=d.dtype))
+    v0 = v0 / jnp.linalg.norm(v0)
+
+    def body(_, v):
+        w = dinv * matvec(v)
+        return w / jnp.maximum(jnp.linalg.norm(w), 1e-30)
+
+    v = jax.lax.fori_loop(0, power_iters, body, v0)
+    w = dinv * matvec(v)
+    lam_max = jnp.vdot(v, w) / jnp.vdot(v, v) * safety
+    lam_min = lam_max / eig_ratio
+    theta = 0.5 * (lam_max + lam_min)
+    delta = 0.5 * (lam_max - lam_min)
+    sigma = theta / delta
+
+    def m(r):
+        # classical Chebyshev iteration for A z = r, z₀ = 0 (Jacobi-scaled)
+        rho = 1.0 / sigma
+        dz = dinv * r / theta
+        z = dz
+        res = r - matvec(dz)
+        for _ in range(degree - 1):
+            rho_new = 1.0 / (2.0 * sigma - rho)
+            dz = rho_new * rho * dz + (2.0 * rho_new / delta) * (dinv * res)
+            rho = rho_new
+            z = z + dz
+            res = res - matvec(dz)
+        return z
+
+    return m
+
+
+register_preconditioner("ebe", ebe_preconditioner)
+register_preconditioner("chebyshev", chebyshev_preconditioner)

@@ -348,6 +348,32 @@ class MatFreeOperator(LinearOperator):
             diag = m * diag + (1.0 - m)
         return diag
 
+    def element_matrices(self) -> jnp.ndarray:
+        """The per-element dense tensors ``K_e`` of this form, ``(E, k, k)``
+        — the Map-stage output the tentpole element tensor-algebra layer
+        (:mod:`repro.core.elemalg`) factorizes, condenses and inverts.
+        ``store="local"`` operators return their stored tensors; the other
+        stores compute them on demand (no global matrix either way).  The
+        Dirichlet ``free_mask`` is *not* applied — callers mask per-element
+        rows/columns themselves (see ``elemalg.masked_element_matrices``)."""
+        if self.k_local is not None:
+            return self.k_local
+        ctx, vs = self._context(), self.static.value_size
+        k_local = None
+        for kind, coeffs, scale in self._term_values():
+            k = weakform.KERNELS[kind].fn(ctx, vs, *coeffs)
+            k = k * jnp.asarray(scale)
+            k_local = k if k_local is None else k_local + k
+        return k_local
+
+    def is_spd(self) -> bool:
+        """True when every kernel in the form signature is declared SPD
+        (``repro.core.weakform.KERNELS[kind].spd``) — drives the
+        Cholesky-vs-LU factorization choice in :mod:`repro.core.elemalg`.
+        ``store="local"`` operators erase coefficient info, so they only
+        keep the kind tags — the declaration still resolves."""
+        return all(weakform.KERNELS[kind].spd for kind, _, _ in self.spec)
+
     def sharded(self, mesh=None, axis_name: str | None = None
                 ) -> "ShardedMatFreeOperator":
         """This operator with its apply partitioned over the element axis of
@@ -449,14 +475,8 @@ def matfree_operator(plan: AssemblyPlan, form, store: str = "context",
             ), coords=None,
         )
     elif store == "local":
-        ctx = op._context()
-        k_local = None
-        for kind, coeffs, scale in op._term_values():
-            k = weakform.KERNELS[kind].fn(ctx, st.value_size, *coeffs)
-            k = k * jnp.asarray(scale)
-            k_local = k if k_local is None else k_local + k
         op = dataclasses.replace(
-            op, k_local=k_local, coords=None, leaves=(),
+            op, k_local=op.element_matrices(), coords=None, leaves=(),
             spec=tuple((kind, None, ()) for kind, _, _ in spec),
         )
     telemetry.gauge_set("operator_state_bytes", op.state_bytes(), store=store)

@@ -6,6 +6,19 @@
   ``(x, SolveInfo)`` where :class:`SolveInfo` carries the iteration count,
   the final residual norm and a ``converged`` flag set from the exit
   condition — an exit at ``maxiter`` is *visible*, not silent garbage.
+* :class:`SolverSpec` — one frozen, hashable value object for the solver
+  knobs ``(method, tol, atol, maxiter, precond)``.  Every solve entry point
+  (:func:`sparse_solve`, :func:`matfree_solve`, both ``_batched`` variants,
+  problem ``.solve()``, the transient integrators) accepts ``spec=``; the
+  old per-kwarg form still works but emits a :class:`DeprecationWarning`.
+  Because a spec is hashable it is also the jit/custom-vjp static argument
+  and the ``repro.serve`` admission-key component.
+* preconditioner registry — :func:`register_preconditioner` maps a name to
+  a ``factory(op) -> m(x)`` (mirroring :mod:`repro.core.matvec`'s backend
+  registry).  Built-ins: ``identity``/``none``, ``jacobi``; the element
+  tensor-algebra layer (:mod:`repro.core.elemalg`) registers ``ebe`` and
+  ``chebyshev`` on import (resolved lazily here, so ``SolverSpec(precond=
+  "chebyshev")`` works without importing elemalg first).
 * :func:`sparse_solve` — ``jax.custom_vjp``: the backward pass solves the
   adjoint system ``Kᵀλ = ḡ`` with the *same* solver and emits the **sparse**
   cotangent ``∂/∂vals = −λ[rows]·U[cols]`` (only at stored nnz positions) and
@@ -18,24 +31,25 @@
   matrix-free solve matches the assembled adjoint path without ever
   materializing values.
 
-Convergence diagnostics (``repro.telemetry``): :func:`sparse_solve`,
-:func:`matfree_solve` and :func:`sparse_solve_batched` accept
-``return_info=True`` and then return ``(x, SolveInfo)``.  The info is a
-**non-differentiated auxiliary output** — its leaves are stop-gradient, so
-the ``custom_vjp`` adjoint structure is untouched and ``jax.grad`` through
-the info-returning path matches the plain path to machine precision.
-Forward *and* adjoint solve statistics are recorded to the telemetry event
-stream whenever values are concrete (eager boundaries); calls made under
-``jit``/``vmap``/``scan`` simply skip host recording (tracer-safe).
+Convergence diagnostics (``repro.telemetry``): every solve entry point
+accepts ``return_info=True`` and then returns ``(x, SolveInfo)``.  The info
+is a **non-differentiated auxiliary output** — its leaves are stop-gradient,
+so the ``custom_vjp`` adjoint structure is untouched and ``jax.grad``
+through the info-returning path matches the plain path to machine
+precision.  Solve events are labelled with method *and* preconditioner, so
+the telemetry iteration histograms split per preconditioner.
 
 ``cg`` / ``bicgstab`` accept either a matvec callable or any object with a
 ``.matvec`` method (CSR, MatFreeOperator); :func:`jacobi_preconditioner`
 needs only ``.diagonal()`` — for matrix-free operators that is a cheap
-diagonal-only assembly.
+diagonal-only assembly, memoized per operator identity through
+:func:`repro.core.sparse.cached_diagonal`.
 """
 
 from __future__ import annotations
 
+import dataclasses
+import warnings
 from functools import partial
 from typing import Callable, NamedTuple
 
@@ -43,11 +57,15 @@ import jax
 import jax.numpy as jnp
 
 from ..telemetry import annotate, events
-from .sparse import CSR, BatchedCSR, _dev
+from .sparse import CSR, BatchedCSR, _dev, cached_diagonal
 
 __all__ = [
     "cg",
     "bicgstab",
+    "SolverSpec",
+    "resolve_solver_spec",
+    "register_preconditioner",
+    "make_preconditioner",
     "jacobi_preconditioner",
     "sparse_solve",
     "sparse_solve_batched",
@@ -74,17 +92,153 @@ def _info_aux(info: SolveInfo) -> SolveInfo:
     return SolveInfo(*(jax.lax.stop_gradient(leaf) for leaf in info))
 
 
+# ---------------------------------------------------------------------------
+# SolverSpec: the solver knobs as one frozen, hashable value object
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SolverSpec:
+    """Solver configuration ``(method, tol, atol, maxiter, precond)`` as a
+    frozen, hashable value object.
+
+    One spec flows from the public entry points through the ``custom_vjp``
+    static arguments into the Krylov loop, and doubles as the solver part of
+    the ``repro.serve`` admission key — requests with different specs never
+    co-batch.  ``precond`` names a registered preconditioner (see
+    :func:`register_preconditioner`) or is a ``factory(op) -> m`` callable.
+    """
+
+    method: str = "bicgstab"
+    tol: float = 1e-10
+    atol: float = 1e-10
+    maxiter: int = 10000
+    precond: str | Callable = "jacobi"
+
+    def replace(self, **kw) -> "SolverSpec":
+        return dataclasses.replace(self, **kw)
+
+    @property
+    def precond_name(self) -> str:
+        return self.precond if isinstance(self.precond, str) else getattr(
+            self.precond, "__name__", "custom")
+
+
+_LEGACY_POS = ("tol", "atol", "maxiter", "precond")
+
+
+def resolve_solver_spec(spec, legacy_pos=(), *, method=None, tol=None,
+                        atol=None, maxiter=None, precond=None,
+                        default: SolverSpec | None = None,
+                        where: str = "solve") -> SolverSpec:
+    """Fold a ``spec=`` argument and/or legacy per-kwarg arguments into one
+    :class:`SolverSpec`.
+
+    The pre-redesign signatures took ``method, tol, atol, maxiter, precond``
+    positionally after the right-hand side; those forms still work — a bare
+    string in the spec slot is the legacy ``method``, ``legacy_pos`` maps to
+    ``(tol, atol, maxiter, precond)`` — but any legacy use emits a
+    ``DeprecationWarning`` naming the entry point.
+    """
+    base_default = SolverSpec() if default is None else default
+    if isinstance(spec, str):
+        if method is not None:
+            raise TypeError(f"{where}: got both a positional method string "
+                            f"({spec!r}) and method={method!r}")
+        method, spec = spec, None
+    if spec is not None and not isinstance(spec, SolverSpec):
+        raise TypeError(
+            f"{where}: spec must be a SolverSpec (got {type(spec).__name__});"
+            " build one with repro.core.SolverSpec(method=..., tol=...)"
+        )
+    if len(legacy_pos) > len(_LEGACY_POS):
+        raise TypeError(f"{where}: too many positional arguments")
+    legacy = dict(zip(_LEGACY_POS, legacy_pos))
+    for name, val in (("method", method), ("tol", tol), ("atol", atol),
+                      ("maxiter", maxiter), ("precond", precond)):
+        if val is not None:
+            if name in legacy:
+                raise TypeError(f"{where}: {name} given positionally and as "
+                                "a keyword")
+            legacy[name] = val
+    if not legacy:
+        return spec if spec is not None else base_default
+    warnings.warn(
+        f"{where}: passing method/tol/atol/maxiter/precond individually is "
+        f"deprecated — pass spec=SolverSpec({', '.join(f'{k}={v!r}' for k, v in legacy.items())})",
+        DeprecationWarning, stacklevel=3,
+    )
+    base = spec if spec is not None else base_default
+    return dataclasses.replace(base, **legacy)
+
+
+# defaults per entry point: the paper's BiCGSTAB+Jacobi for assembled CSR
+# systems, CG+Jacobi for the (symmetric-by-construction) matrix-free path
+_SPARSE_DEFAULT = SolverSpec(method="bicgstab")
+_MATFREE_DEFAULT = SolverSpec(method="cg")
+
+
+# ---------------------------------------------------------------------------
+# Preconditioner registry (mirrors repro.core.matvec's backend registry)
+# ---------------------------------------------------------------------------
+
 def jacobi_preconditioner(a) -> Callable:
     """Diagonal (Jacobi) preconditioner from anything with ``.diagonal()`` —
     an assembled :class:`CSR` or a matrix-free operator (diagonal-only
-    assembly, no nnz vector)."""
-    d = a.diagonal()
+    assembly, no nnz vector).  The diagonal is memoized per (operator
+    identity, dtype) via :func:`repro.core.sparse.cached_diagonal`, so
+    repeated solves against the same operator skip the re-densification."""
+    d = cached_diagonal(a)
     inv = jnp.where(jnp.abs(d) > 0, 1.0 / d, 1.0)
     return lambda x: inv * x
 
 
 def _identity(x):
     return x
+
+
+_PRECONDITIONERS: dict[str, Callable] = {}
+
+
+def register_preconditioner(name: str, factory: Callable, *,
+                            overwrite: bool = False):
+    """Register ``factory(op) -> m`` under ``name`` so any
+    :class:`SolverSpec` (and the legacy ``precond=`` kwarg) can select it.
+
+    ``op`` is whatever reaches the solve (CSR, MatFreeOperator, ...);
+    ``m(x)`` must be trace-compatible (it runs inside the Krylov
+    ``while_loop``).  Mirrors :func:`repro.core.matvec.register_matvec_backend`.
+    """
+    if name in _PRECONDITIONERS and not overwrite:
+        raise ValueError(
+            f"preconditioner {name!r} already registered; pass overwrite=True"
+        )
+    _PRECONDITIONERS[name] = factory
+
+
+register_preconditioner("identity", lambda op: _identity)
+register_preconditioner("none", lambda op: _identity)
+register_preconditioner("jacobi", jacobi_preconditioner)
+
+
+def make_preconditioner(op, precond="jacobi") -> Callable:
+    """Resolve a preconditioner name (or ``factory`` callable, or ``None``
+    for identity) against ``op`` via the registry.  Unknown names raise a
+    ``KeyError`` listing what is registered."""
+    if precond is None:
+        return _identity
+    if callable(precond):
+        return precond(op)
+    factory = _PRECONDITIONERS.get(precond)
+    if factory is None and precond in ("ebe", "chebyshev"):
+        from . import elemalg  # noqa: F401  (registers ebe/chebyshev)
+        factory = _PRECONDITIONERS.get(precond)
+    if factory is None:
+        raise KeyError(
+            f"unknown preconditioner {precond!r}; registered: "
+            f"{sorted(_PRECONDITIONERS)} — add one with "
+            "repro.core.register_preconditioner(name, factory)"
+        )
+    return factory(op)
 
 
 def _as_matvec(a) -> Callable:
@@ -181,38 +335,47 @@ def bicgstab(matvec, b, x0=None, *, tol=1e-10, atol=1e-10, maxiter=10000, m=_ide
 _METHODS = {"cg": cg, "bicgstab": bicgstab}
 
 
+def _method(name):
+    try:
+        return _METHODS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown solver method {name!r}; use one of {sorted(_METHODS)}"
+        ) from None
+
+
 # ---------------------------------------------------------------------------
 # Differentiable sparse solve (TORCH-SLA analogue)
 # ---------------------------------------------------------------------------
 
-def _solve_impl(a: CSR, b, method, tol, atol, maxiter, precond, transpose=False):
+def _solve_impl(a: CSR, b, spec: SolverSpec, transpose=False):
     matvec = a.rmatvec if transpose else a.matvec
-    m = jacobi_preconditioner(a) if precond == "jacobi" else _identity
-    return _METHODS[method](matvec, b, tol=tol, atol=atol, maxiter=maxiter, m=m)
+    m = make_preconditioner(a, spec.precond)
+    return _method(spec.method)(matvec, b, tol=spec.tol, atol=spec.atol,
+                                maxiter=spec.maxiter, m=m)
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6, 7))
-def _sparse_solve(a: CSR, b, method, tol, atol, maxiter, precond, return_info):
-    x, info = _solve_impl(a, b, method, tol, atol, maxiter, precond)
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _sparse_solve(a: CSR, b, spec: SolverSpec, return_info):
+    x, info = _solve_impl(a, b, spec)
     return (x, _info_aux(info)) if return_info else x
 
 
-def _solve_fwd(a, b, method, tol, atol, maxiter, precond, return_info):
-    x, info = _solve_impl(a, b, method, tol, atol, maxiter, precond)
+def _solve_fwd(a, b, spec, return_info):
+    x, info = _solve_impl(a, b, spec)
     out = (x, _info_aux(info)) if return_info else x
     return out, (a, x)
 
 
-def _solve_bwd(method, tol, atol, maxiter, precond, return_info, res, g):
+def _solve_bwd(spec, return_info, res, g):
     a, x = res
     gx = g[0] if return_info else g
     # adjoint: Kᵀ λ = ḡ   (Eq. 11; sign handled by the chain rule caller)
-    lam, adj_info = _solve_impl(a, gx, method, tol, atol, maxiter, precond,
-                                transpose=True)
+    lam, adj_info = _solve_impl(a, gx, spec, transpose=True)
     # adjoint-solve diagnostics: recorded when the backward pass runs with
     # concrete cotangents (eager grad); a no-op under further tracing
-    events.record_solve("sparse_solve.adjoint", adj_info, method=method,
-                        phase="adjoint")
+    events.record_solve("sparse_solve.adjoint", adj_info, method=spec.method,
+                        precond=spec.precond_name, phase="adjoint")
     # ∂L/∂vals = −λ_r · x_c at each stored (r, c) — never densified
     dvals = -lam[_dev(a.row_of_nnz)] * x[_dev(a.indices)]
     da = CSR(dvals, a.indptr, a.indices, a.row_of_nnz, a.shape, a.diag_pos)
@@ -222,19 +385,27 @@ def _solve_bwd(method, tol, atol, maxiter, precond, return_info, res, g):
 _sparse_solve.defvjp(_solve_fwd, _solve_bwd)
 
 
-def sparse_solve(a: CSR, b, method="bicgstab", tol=1e-10, atol=1e-10,
-                 maxiter=10000, precond="jacobi", return_info=False):
+def sparse_solve(a: CSR, b, spec: SolverSpec | None = None, *legacy,
+                 method=None, tol=None, atol=None, maxiter=None, precond=None,
+                 return_info=False):
     """x = A⁻¹ b, differentiable w.r.t. ``a.vals`` and ``b`` via the adjoint.
+
+    Solver knobs come in as one :class:`SolverSpec` (``spec=``; default
+    BiCGSTAB + Jacobi at 1e-10).  The legacy per-kwarg form
+    (``method=, tol=, ...``) still works but emits a ``DeprecationWarning``.
 
     ``return_info=True`` additionally returns the :class:`SolveInfo`
     (iterations / final residual / ``converged``) as a stop-gradient
     auxiliary output — gradients are bit-identical to the plain path.
     """
-    out = _sparse_solve(a, b, method, tol, atol, maxiter, precond,
-                        bool(return_info))
+    spec = resolve_solver_spec(spec, legacy, method=method, tol=tol,
+                               atol=atol, maxiter=maxiter, precond=precond,
+                               default=_SPARSE_DEFAULT, where="sparse_solve")
+    out = _sparse_solve(a, b, spec, bool(return_info))
     if return_info:
         x, info = out
-        events.record_solve("sparse_solve", info, method=method, backend="csr")
+        events.record_solve("sparse_solve", info, method=spec.method,
+                            backend="csr", precond=spec.precond_name)
         return x, info
     return out
 
@@ -243,31 +414,31 @@ def sparse_solve(a: CSR, b, method="bicgstab", tol=1e-10, atol=1e-10,
 # Differentiable matrix-free solve: the adjoint trick for pytree operators
 # ---------------------------------------------------------------------------
 
-def _op_solve_impl(op, b, method, tol, atol, maxiter, precond, transpose=False):
+def _op_solve_impl(op, b, spec: SolverSpec, transpose=False):
     matvec = op.rmatvec if transpose else op.matvec
-    m = jacobi_preconditioner(op) if precond == "jacobi" else _identity
-    return _METHODS[method](matvec, b, tol=tol, atol=atol, maxiter=maxiter, m=m)
+    m = make_preconditioner(op, spec.precond)
+    return _method(spec.method)(matvec, b, tol=spec.tol, atol=spec.atol,
+                                maxiter=spec.maxiter, m=m)
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6, 7))
-def _matfree_solve(op, b, method, tol, atol, maxiter, precond, return_info):
-    x, info = _op_solve_impl(op, b, method, tol, atol, maxiter, precond)
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _matfree_solve(op, b, spec: SolverSpec, return_info):
+    x, info = _op_solve_impl(op, b, spec)
     return (x, _info_aux(info)) if return_info else x
 
 
-def _matfree_fwd(op, b, method, tol, atol, maxiter, precond, return_info):
-    x, info = _op_solve_impl(op, b, method, tol, atol, maxiter, precond)
+def _matfree_fwd(op, b, spec, return_info):
+    x, info = _op_solve_impl(op, b, spec)
     out = (x, _info_aux(info)) if return_info else x
     return out, (op, x)
 
 
-def _matfree_bwd(method, tol, atol, maxiter, precond, return_info, res, g):
+def _matfree_bwd(spec, return_info, res, g):
     op, x = res
     gx = g[0] if return_info else g
-    lam, adj_info = _op_solve_impl(op, gx, method, tol, atol, maxiter, precond,
-                                   transpose=True)
-    events.record_solve("matfree_solve.adjoint", adj_info, method=method,
-                        phase="adjoint")
+    lam, adj_info = _op_solve_impl(op, gx, spec, transpose=True)
+    events.record_solve("matfree_solve.adjoint", adj_info, method=spec.method,
+                        precond=spec.precond_name, phase="adjoint")
     # ∂L/∂θ = −λᵀ (∂A/∂θ) x — the vjp of the apply w.r.t. the operator pytree
     _, pullback = jax.vjp(lambda o: o.matvec(x), op)
     (d_op,) = pullback(-lam)
@@ -277,8 +448,9 @@ def _matfree_bwd(method, tol, atol, maxiter, precond, return_info, res, g):
 _matfree_solve.defvjp(_matfree_fwd, _matfree_bwd)
 
 
-def matfree_solve(op, b, method="cg", tol=1e-10, atol=1e-10,
-                  maxiter=10000, precond="jacobi", return_info=False):
+def matfree_solve(op, b, spec: SolverSpec | None = None, *legacy,
+                  method=None, tol=None, atol=None, maxiter=None, precond=None,
+                  return_info=False):
     """``x = A⁻¹ b`` for any pytree linear operator with ``matvec`` /
     ``rmatvec`` / ``diagonal`` — differentiable w.r.t. the operator's traced
     leaves (coefficients, geometry) *and* ``b`` via the adjoint solve.
@@ -289,21 +461,26 @@ def matfree_solve(op, b, method="cg", tol=1e-10, atol=1e-10,
     matrix-free apply-transpose, never an assembled matrix.  (A :class:`CSR`
     works too and reproduces :func:`sparse_solve`'s sparse cotangent.)
 
-    ``return_info=True`` additionally returns the :class:`SolveInfo` as a
-    stop-gradient auxiliary output (gradients match the plain path).
+    Solver knobs come in as one :class:`SolverSpec` (default CG + Jacobi);
+    legacy per-kwarg use emits a ``DeprecationWarning``.  ``return_info=True``
+    additionally returns the :class:`SolveInfo` as a stop-gradient auxiliary
+    output (gradients match the plain path).
     """
-    out = _matfree_solve(op, b, method, tol, atol, maxiter, precond,
-                         bool(return_info))
+    spec = resolve_solver_spec(spec, legacy, method=method, tol=tol,
+                               atol=atol, maxiter=maxiter, precond=precond,
+                               default=_MATFREE_DEFAULT, where="matfree_solve")
+    out = _matfree_solve(op, b, spec, bool(return_info))
     if return_info:
         x, info = out
-        events.record_solve("matfree_solve", info, method=method,
-                            backend="matfree")
+        events.record_solve("matfree_solve", info, method=spec.method,
+                            backend="matfree", precond=spec.precond_name)
         return x, info
     return out
 
 
-def matfree_solve_batched(family, b, method="cg", tol=1e-10, atol=1e-10,
-                          maxiter=10000, precond="jacobi", return_info=False):
+def matfree_solve_batched(family, b, spec: SolverSpec | None = None, *legacy,
+                          method=None, tol=None, atol=None, maxiter=None,
+                          precond=None, return_info=False):
     """``X_b = A_b⁻¹ b_b`` over a matrix-free
     :class:`~repro.core.operator.MatFreeFamily` — one ``vmap`` of the
     differentiable :func:`matfree_solve` with the family's leaf axes, so the
@@ -315,25 +492,27 @@ def matfree_solve_batched(family, b, method="cg", tol=1e-10, atol=1e-10,
     Gradients w.r.t. the batched coefficient leaves match B per-instance
     adjoint :func:`matfree_solve` calls.
     """
+    spec = resolve_solver_spec(spec, legacy, method=method, tol=tol,
+                               atol=atol, maxiter=maxiter, precond=precond,
+                               default=_MATFREE_DEFAULT,
+                               where="matfree_solve_batched")
     b = jnp.asarray(b)
     in_b = None if b.ndim == 1 else 0
     out = jax.vmap(
-        lambda op, bi: _matfree_solve(
-            op, bi, method, tol, atol, maxiter, precond, bool(return_info)
-        ),
+        lambda op, bi: _matfree_solve(op, bi, spec, bool(return_info)),
         in_axes=(family.in_axes(), in_b),
     )(family.op, b)
     if return_info:
         x, info = out
-        events.record_solve("matfree_solve_batched", info, method=method,
-                            backend="matfree")
+        events.record_solve("matfree_solve_batched", info, method=spec.method,
+                            backend="matfree", precond=spec.precond_name)
         return x, info
     return out
 
 
-def sparse_solve_batched(a: BatchedCSR, b, method="bicgstab", tol=1e-10,
-                         atol=1e-10, maxiter=10000, precond="jacobi",
-                         return_info=False):
+def sparse_solve_batched(a: BatchedCSR, b, spec: SolverSpec | None = None,
+                         *legacy, method=None, tol=None, atol=None,
+                         maxiter=None, precond=None, return_info=False):
     """X_b = A_b⁻¹ b_b over a :class:`BatchedCSR` family — one ``vmap`` of the
     differentiable :func:`sparse_solve`, so the B Krylov solves share a
     single XLA executable (and a single adjoint executable under ``grad``).
@@ -341,18 +520,19 @@ def sparse_solve_batched(a: BatchedCSR, b, method="bicgstab", tol=1e-10,
     ``b`` is ``(B, n)`` per-instance or ``(n,)`` shared; returns ``(B, n)``
     (plus a ``SolveInfo`` with ``(B,)`` leaves under ``return_info=True``).
     """
+    spec = resolve_solver_spec(spec, legacy, method=method, tol=tol,
+                               atol=atol, maxiter=maxiter, precond=precond,
+                               default=_SPARSE_DEFAULT,
+                               where="sparse_solve_batched")
     b = jnp.asarray(b)
     in_b = None if b.ndim == 1 else 0
     out = jax.vmap(
-        lambda ab, bi: _sparse_solve(
-            ab.as_csr(), bi, method, tol, atol, maxiter, precond,
-            bool(return_info),
-        ),
+        lambda ab, bi: _sparse_solve(ab.as_csr(), bi, spec, bool(return_info)),
         in_axes=(0, in_b),
     )(a, b)
     if return_info:
         x, info = out
-        events.record_solve("sparse_solve_batched", info, method=method,
-                            backend="csr")
+        events.record_solve("sparse_solve_batched", info, method=spec.method,
+                            backend="csr", precond=spec.precond_name)
         return x, info
     return out

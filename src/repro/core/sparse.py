@@ -45,10 +45,57 @@ def _dev(x) -> jnp.ndarray:
 
 
 def clear_device_mirrors():
-    """Release every cached (host, device) pattern-array pair and ELL layout
-    — part of the ``repro.core.clear_assembly_caches`` memory-release path."""
+    """Release every cached (host, device) pattern-array pair, ELL layout and
+    operator diagonal — part of the ``repro.core.clear_assembly_caches``
+    memory-release path."""
     _DEVICE_MIRRORS.clear()
     _ELL_LAYOUTS.clear()
+    _DIAGONALS.clear()
+
+
+# operator diagonals keyed by (operator identity, dtype): the Jacobi
+# preconditioner asks for ``.diagonal()`` on every solve, but for a CSR the
+# diagonal is a fixed gather of ``vals`` and for a matrix-free operator a
+# diagonal-only assembly — both pure functions of the anchor array's values.
+# Keyed on the *value anchor* (``vals`` for CSR, the operator object for
+# matrix-free), with a strong reference so ids cannot be recycled while
+# cached; same FIFO bound rationale as the device mirrors above.
+_DIAGONALS: dict[tuple[int, str], tuple[object, jnp.ndarray]] = {}
+_DIAGONALS_LIMIT = 256
+
+
+def cached_diagonal(op) -> jnp.ndarray:
+    """``op.diagonal()`` memoized per (operator identity, dtype).
+
+    The cache key anchors on ``op.vals`` when present (a :class:`CSR` /
+    :class:`ELL` rebuilt around the same value buffer shares the diagonal)
+    and on the operator object otherwise.  Tracers are never cached: inside
+    a trace the diagonal is part of the jaxpr and caching by ``id`` would
+    leak abstract values across traces.
+    """
+    anchor = getattr(op, "vals", None)
+    if anchor is None:
+        anchor = op
+    if any(
+        isinstance(leaf, jax.core.Tracer)
+        for leaf in jax.tree_util.tree_leaves(op)
+    ):
+        return op.diagonal()
+    dtype = getattr(anchor, "dtype", None)
+    if dtype is None:
+        leaves = jax.tree_util.tree_leaves(op)
+        dtype = getattr(leaves[0], "dtype", None) if leaves else None
+    key = (id(anchor), str(dtype))
+    hit = _DIAGONALS.get(key)
+    if hit is not None:
+        return hit[1]
+    d = op.diagonal()
+    if isinstance(d, jax.core.Tracer):
+        return d
+    while len(_DIAGONALS) >= _DIAGONALS_LIMIT:
+        _DIAGONALS.pop(next(iter(_DIAGONALS)))
+    _DIAGONALS[key] = (anchor, d)
+    return d
 
 
 @jax.tree_util.register_pytree_node_class

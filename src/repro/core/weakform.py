@@ -68,12 +68,18 @@ class _Kernel:
     consumed by the matrix-free operator (:mod:`repro.core.operator`) to
     reuse the forward action for ``rmatvec`` (a tensor-coefficient
     anisotropic diffusion is symmetric only for symmetric A, so it is
-    conservatively marked nonsymmetric).
+    conservatively marked nonsymmetric).  ``spd`` additionally declares the
+    element tensors symmetric positive *semi*-definite for admissible
+    (positive) coefficients — the element tensor-algebra layer
+    (:mod:`repro.core.elemalg`) uses it to pick Cholesky over LU for the
+    batched factorizations (advection and general anisotropic tensors fall
+    back to LU).
     """
 
     arity: str
     fn: Callable
     symmetric: bool = False
+    spd: bool = False
 
 
 def _source_kernel(ctx, vs, f):
@@ -82,19 +88,21 @@ def _source_kernel(ctx, vs, f):
 
 KERNELS: dict[str, _Kernel] = {
     "diffusion": _Kernel(
-        MATRIX, lambda ctx, vs, rho: forms.diffusion(ctx, rho), symmetric=True
+        MATRIX, lambda ctx, vs, rho: forms.diffusion(ctx, rho), symmetric=True,
+        spd=True,
     ),
     "anisotropic_diffusion": _Kernel(
         MATRIX, lambda ctx, vs, a: forms.anisotropic_diffusion(ctx, a)
     ),
     "advection": _Kernel(MATRIX, lambda ctx, vs, beta: forms.advection(ctx, beta)),
     "mass": _Kernel(
-        MATRIX, lambda ctx, vs, c: forms.mass(ctx, c), symmetric=True
+        MATRIX, lambda ctx, vs, c: forms.mass(ctx, c), symmetric=True, spd=True
     ),
     "elasticity": _Kernel(
         MATRIX,
         lambda ctx, vs, lam, mu, scale: forms.elasticity(ctx, lam, mu, scale=scale),
         symmetric=True,
+        spd=True,
     ),
     "source": _Kernel(VECTOR, _source_kernel),
     "reaction": _Kernel(

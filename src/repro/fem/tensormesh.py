@@ -24,13 +24,14 @@ from ..core import (
     FacetAssembler,
     FunctionSpace,
     GalerkinAssembler,
-    bicgstab,
-    cg,
-    jacobi_preconditioner,
+    SolverSpec,
     make_matvec,
+    make_preconditioner,
     matfree_operator,
+    resolve_solver_spec,
     weakform as wf,
 )
+from ..core.solvers import _method
 from ..core import forms
 from ..core.mesh import Mesh, element_for_mesh
 
@@ -55,6 +56,14 @@ class _ProblemBase:
     use_ell = True  # ELL matvec in the Krylov loop: 2.1× end-to-end (§Perf-FEM)
     backend = None  # default matvec backend (None → "ell" per use_ell flag)
 
+    def _spec(self, spec, tol, maxiter, where) -> SolverSpec:
+        """One :class:`~repro.core.SolverSpec` per solve: ``spec=`` wins,
+        legacy ``tol=``/``maxiter=`` kwargs shim into it (deprecated)."""
+        return resolve_solver_spec(
+            spec, tol=tol, maxiter=maxiter,
+            default=SolverSpec(method=self.method),
+            where=f"{type(self).__name__}.{where}")
+
     @property
     def plan(self):
         """The problem's :class:`~repro.core.AssemblyPlan` — the functional
@@ -67,31 +76,34 @@ class _ProblemBase:
             return self.backend
         return "ell" if self.use_ell else "csr"
 
-    def _solve_system(self, k, f, tol=1e-10, maxiter=10000, backend=None,
+    def _solve_system(self, k, f, spec: SolverSpec, backend=None,
                       return_info=False):
         """Krylov solve on an assembled operator with the inner matvec from
-        the unified registry (:mod:`repro.core.matvec`).  A ``maxiter`` exit
-        is reported through :func:`repro.telemetry.check_convergence`
-        (warn/raise per policy) and the ``converged`` flag on the result;
-        ``return_info=True`` appends the raw
-        :class:`~repro.core.solvers.SolveInfo`."""
-        solver = cg if self.method == "cg" else bicgstab
+        the unified registry (:mod:`repro.core.matvec`) and the
+        preconditioner resolved from ``spec.precond`` via the registry.  A
+        ``maxiter`` exit is reported through
+        :func:`repro.telemetry.check_convergence` (warn/raise per policy)
+        and the ``converged`` flag on the result; ``return_info=True``
+        appends the raw :class:`~repro.core.solvers.SolveInfo`."""
         be = backend or self._default_backend()
         matvec = make_matvec(k, be)
         t0 = time.perf_counter()
-        u, info = solver(matvec, f, m=jacobi_preconditioner(k), tol=tol, maxiter=maxiter)
+        u, info = _method(spec.method)(
+            matvec, f, m=make_preconditioner(k, spec.precond),
+            tol=spec.tol, atol=spec.atol, maxiter=spec.maxiter)
         where = f"{type(self).__name__}.solve"
         events.check_convergence(info, where=where)
         if telemetry.is_enabled():
-            events.record_solve(where, info, method=self.method, backend=be,
+            events.record_solve(where, info, method=spec.method, backend=be,
+                                precond=spec.precond_name,
                                 wall_us=(time.perf_counter() - t0) * 1e6)
         rel = float(jnp.linalg.norm(k.matvec(u) - f) / jnp.linalg.norm(f))
         res = _SolveResult(u, int(info.iters), rel, bool(info.converged))
         return (res, info) if return_info else res
 
-    def _solve_matfree(self, form, load, tol=1e-10, maxiter=10000,
+    def _solve_matfree(self, form, load, spec: SolverSpec,
                        dirichlet_values=0.0, return_info=False,
-                       sharded=False):
+                       sharded=False, condensed=False):
         """Matrix-free Krylov solve: the operator applies ``form`` straight
         from the plan (element-local Map → per-element action →
         scatter-Reduce), Jacobi from a diagonal-only assembly, Dirichlet
@@ -101,7 +113,15 @@ class _ProblemBase:
         the Jacobi diagonal assembly and the RHS lift) over the local device
         mesh, so one Krylov solve spans all devices.  (For a
         *differentiable* matrix-free solve use
-        :func:`repro.core.matfree_solve` on the same operator.)"""
+        :func:`repro.core.matfree_solve` on the same operator.)
+
+        ``spec.precond`` selects any registered preconditioner — ``"ebe"``
+        and ``"chebyshev"`` stay matrix-free.  ``condensed=True`` statically
+        condenses the higher-order DOFs (degree ≥ 2 spaces) and runs the
+        Krylov iteration on the interface Schur complement only
+        (:func:`repro.core.elemalg.condensed_solve` machinery)."""
+        from ..core import elemalg
+
         op_full = matfree_operator(self.plan, form)
         if sharded:
             op_full = op_full.sharded()
@@ -112,16 +132,21 @@ class _ProblemBase:
             f = self.bc.project_residual(load)
         else:
             f = self.bc.lift(op_full, load, dirichlet_values)
-        solver = cg if self.method == "cg" else bicgstab
         t0 = time.perf_counter()
-        u, info = solver(op.matvec, f, m=jacobi_preconditioner(op),
-                         tol=tol, maxiter=maxiter)
+        if condensed:
+            sys = elemalg.condense(op, elemalg.vertex_split(self.space))
+            u, info = sys.solve(f, spec)
+        else:
+            u, info = _method(spec.method)(
+                op.matvec, f, m=make_preconditioner(op, spec.precond),
+                tol=spec.tol, atol=spec.atol, maxiter=spec.maxiter)
         where = f"{type(self).__name__}.solve"
         events.check_convergence(info, where=where)
         if telemetry.is_enabled():
             events.record_solve(
-                where, info, method=self.method,
+                where, info, method=spec.method,
                 backend="matfree_sharded" if sharded else "matfree",
+                precond="condensed" if condensed else spec.precond_name,
                 wall_us=(time.perf_counter() - t0) * 1e6)
         rel = float(jnp.linalg.norm(op.matvec(u) - f) / jnp.linalg.norm(f))
         res = _SolveResult(u, int(info.iters), rel, bool(info.converged))
@@ -142,20 +167,30 @@ class PoissonProblem(_ProblemBase):
         load = self.asm.assemble_rhs(wf.source(f))
         return self.bc.apply(k, load)
 
-    def solve(self, rho=None, f=1.0, tol=1e-10, backend=None,
-              return_info=False):
+    def solve(self, rho=None, f=1.0, spec: SolverSpec | None = None,
+              tol=None, maxiter=None, backend=None, return_info=False,
+              condensed=False):
         """Solve with a registry-selected matvec backend; ``"matfree"``
         skips matrix assembly entirely (only the RHS vector is assembled)
         and ``"matfree_sharded"`` additionally spans the solve over all
-        local devices.  ``return_info=True`` appends the raw
+        local devices.  Solver knobs come in as one
+        :class:`~repro.core.SolverSpec` (``spec=``; legacy ``tol=`` /
+        ``maxiter=`` kwargs still work but are deprecated).
+        ``condensed=True`` (matfree backends, degree ≥ 2) runs the Krylov
+        iteration on the statically condensed interface system.
+        ``return_info=True`` appends the raw
         :class:`~repro.core.solvers.SolveInfo`."""
+        spec = self._spec(spec, tol, maxiter, "solve")
         if backend in ("matfree", "matfree_sharded"):
             load = self.asm.assemble_rhs(wf.source(f))
-            return self._solve_matfree(wf.diffusion(rho), load, tol,
+            return self._solve_matfree(wf.diffusion(rho), load, spec,
                                        return_info=return_info,
-                                       sharded=backend == "matfree_sharded")
+                                       sharded=backend == "matfree_sharded",
+                                       condensed=condensed)
+        if condensed:
+            raise ValueError("condensed=True needs a matfree backend")
         k, load = self.assemble(rho, f)
-        return self._solve_system(k, load, tol, backend=backend,
+        return self._solve_system(k, load, spec, backend=backend,
                                   return_info=return_info)
 
     # -- many-query batched data generation (SM B.1.4) ------------------------
@@ -163,14 +198,15 @@ class PoissonProblem(_ProblemBase):
         """Solve K u_b = F(f_b) for a batch of nodal source fields
         ``f_batch: (B, num_dofs)`` — assembly amortized, solve vmapped."""
         k = self.bc.apply_matrix_only(self.asm.assemble(wf.diffusion(rho)))
-        m = jacobi_preconditioner(k)
+        m = make_preconditioner(k, "jacobi")
 
         @jax.jit
         def run(fb):
             def solve_one(f_nodal):
                 load = self.asm.assemble_rhs(wf.source(f_nodal))
                 load = self.bc.project_residual(load)
-                u, info = cg(k.matvec, load, m=m, tol=tol, maxiter=maxiter)
+                u, info = _method("cg")(k.matvec, load, m=m, tol=tol,
+                                        maxiter=maxiter)
                 return u, info.iters
 
             return jax.vmap(solve_one)(fb)
@@ -193,7 +229,9 @@ class PoissonProblem(_ProblemBase):
         )
         kc = self.bc.apply_matrix_only(kb)
         load = self.bc.project_residual(assemble_rhs(self.plan, wf.source(f)))
-        return sparse_solve_batched(kc, load, "cg", tol, tol, maxiter)
+        return sparse_solve_batched(
+            kc, load, SolverSpec(method="cg", tol=tol, atol=tol,
+                                 maxiter=maxiter))
 
 
 class AdvectionDiffusionProblem(_ProblemBase):
@@ -217,16 +255,18 @@ class AdvectionDiffusionProblem(_ProblemBase):
         return self.bc.apply(k, load, dirichlet_values)
 
     def solve(self, eps=1.0, beta=(1.0, 0.0), f=1.0, dirichlet_values=0.0,
-              tol=1e-10, backend=None, return_info=False):
+              spec: SolverSpec | None = None, tol=None, maxiter=None,
+              backend=None, return_info=False):
+        spec = self._spec(spec, tol, maxiter, "solve")
         if backend in ("matfree", "matfree_sharded"):
             form = wf.diffusion(eps) + wf.advection(jnp.asarray(beta))
             load = self.asm.assemble_rhs(wf.source(f))
-            return self._solve_matfree(form, load, tol,
+            return self._solve_matfree(form, load, spec,
                                        dirichlet_values=dirichlet_values,
                                        return_info=return_info,
                                        sharded=backend == "matfree_sharded")
         k, load = self.assemble(eps, beta, f, dirichlet_values)
-        return self._solve_system(k, load, tol, backend=backend,
+        return self._solve_system(k, load, spec, backend=backend,
                                   return_info=return_info)
 
 
@@ -251,19 +291,20 @@ class ElasticityProblem(_ProblemBase):
         f = self.asm.assemble_rhs(wf.source(bf))
         return self.bc.apply(k, f)
 
-    def solve(self, body_force=None, tol=1e-10, backend=None,
-              return_info=False):
+    def solve(self, body_force=None, spec: SolverSpec | None = None,
+              tol=None, maxiter=None, backend=None, return_info=False):
+        spec = self._spec(spec, tol, maxiter, "solve")
         if backend in ("matfree", "matfree_sharded"):
             d = self.mesh.dim
             bf = jnp.ones(d) if body_force is None else jnp.asarray(body_force)
             load = self.asm.assemble_rhs(wf.source(bf))
             return self._solve_matfree(
-                wf.elasticity(self.lam, self.mu), load, tol,
+                wf.elasticity(self.lam, self.mu), load, spec,
                 return_info=return_info,
                 sharded=backend == "matfree_sharded",
             )
         k, f = self.assemble(body_force)
-        return self._solve_system(k, f, tol, backend=backend,
+        return self._solve_system(k, f, spec, backend=backend,
                                   return_info=return_info)
 
 
@@ -311,8 +352,10 @@ class MixedBCPoisson(_ProblemBase):
         self._ctx_r = self._fa_r.context() if self._fa_r is not None else None
 
     def solve(self, f, g_neumann=None, robin_alpha=1.0, g_robin=None,
-              dirichlet_values=None, rho=None, tol=1e-10, backend=None,
-              return_info=False):
+              dirichlet_values=None, rho=None,
+              spec: SolverSpec | None = None, tol=None, maxiter=None,
+              backend=None, return_info=False):
+        spec = self._spec(spec, tol, maxiter, "solve")
         if backend in ("matfree", "matfree_sharded"):
             raise NotImplementedError(
                 "MixedBCPoisson has Robin facet terms, which the matrix-free "
@@ -347,5 +390,5 @@ class MixedBCPoisson(_ProblemBase):
             d_dofs = self.bc.bc_dofs
             bvals = jnp.asarray(dirichlet_values(self.space.dof_points[d_dofs]))
         kc, fc = self.bc.apply(k, load, bvals)
-        return self._solve_system(kc, fc, tol, backend=backend,
+        return self._solve_system(kc, fc, spec, backend=backend,
                                   return_info=return_info)

@@ -49,8 +49,7 @@ def _run_smoke() -> int:
     # answer correctness vs one sequential reference solve
     rq = reqs[0]
     k = rq.bc.apply_matrix_only(assemble(rq.plan, rq.form))
-    u_ref = sparse_solve(k, rq.rhs * rq.bc.free_mask, rq.method,
-                         rq.tol, rq.tol, rq.maxiter)
+    u_ref = sparse_solve(k, rq.rhs * rq.bc.free_mask, rq.spec)
     pend = svc.submit(rq)
     svc.drain()
     err = float(jnp.max(jnp.abs(pend.result() - u_ref)))

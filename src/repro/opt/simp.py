@@ -26,7 +26,11 @@ from ..core import (
 )
 from ..core.mesh import rectangle_quad
 from ..core.mesh import element_for_mesh
-from ..core.solvers import sparse_solve
+from ..core.solvers import SolverSpec, sparse_solve
+
+# SIMP compliance solves: CG+Jacobi at paper tolerance, deep maxiter for
+# the nearly-void SIMP states near convergence
+_SIMP_SPEC = SolverSpec(method="cg", tol=1e-10, atol=1e-10, maxiter=30000)
 
 __all__ = ["CantileverProblem", "sensitivity_filter", "oc_update"]
 
@@ -106,7 +110,7 @@ class CantileverProblem:
         scale = self.simp_modulus(rho)
         k = self.asm.assemble(wf.elasticity(self.lam1, self.mu1, scale=scale))
         kc = self.bc.apply_matrix_only(k)
-        u = sparse_solve(kc, self.f, "cg", 1e-10, 1e-10, 30000)
+        u = sparse_solve(kc, self.f, _SIMP_SPEC)
         return jnp.dot(self.f, u)
 
     @partial(jax.jit, static_argnums=(0,))
@@ -129,7 +133,7 @@ class CantileverProblem:
         kc = self.bc.apply_matrix_only(kb)
 
         def one(k):
-            u = sparse_solve(k.as_csr(), self.f, "cg", 1e-10, 1e-10, 30000)
+            u = sparse_solve(k.as_csr(), self.f, _SIMP_SPEC)
             return jnp.dot(self.f, u)
 
         return jax.vmap(one)(kc)
@@ -168,7 +172,7 @@ class CantileverProblem:
         scale = self.simp_modulus(rho)
         k = self.asm.assemble(wf.elasticity(self.lam1, self.mu1, scale=scale))
         kc = self.bc.apply_matrix_only(k)
-        u = sparse_solve(kc, self.f, "cg", 1e-10, 1e-10, 30000)
+        u = sparse_solve(kc, self.f, _SIMP_SPEC)
         u_e = u[self._cell_dofs]                                # (E, k)
         quad = jnp.einsum("ea,eab,eb->e", u_e, self._k0_local, u_e)
         return -self.penal * rho ** (self.penal - 1) * (self.e_max - self.e_min) * quad

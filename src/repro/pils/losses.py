@@ -32,6 +32,7 @@ from ..core import (
     make_residual,
     matfree_family,
     matfree_operator,
+    SolverSpec,
     matfree_solve_batched,
     sparse_solve_batched,
     weakform as wf,
@@ -222,13 +223,16 @@ class BatchedGalerkinResidualLoss:
         r = self.residual(u_batch)
         return jnp.mean(jnp.sum(r**2, axis=-1))
 
-    def solve(self, tol=1e-10, maxiter=10000) -> jnp.ndarray:
+    def solve(self, spec: SolverSpec | None = None, *, tol=1e-10,
+              maxiter=10000) -> jnp.ndarray:
         """Direct FEM solutions of the whole family — one vmapped adjoint
-        solve (reference targets / sanity checks for the learned U_b)."""
+        solve (reference targets / sanity checks for the learned U_b).
+        ``spec=`` overrides the default CG+Jacobi configuration."""
+        if spec is None:
+            spec = SolverSpec(method="cg", tol=tol, atol=tol, maxiter=maxiter)
         if self.backend == "matfree":
-            return matfree_solve_batched(self.k, self.f, "cg", tol, tol,
-                                         maxiter)
-        return sparse_solve_batched(self.k, self.f, "cg", tol, tol, maxiter)
+            return matfree_solve_batched(self.k, self.f, spec)
+        return sparse_solve_batched(self.k, self.f, spec)
 
     def loss_from_net(self, u_fn, params_batch) -> jnp.ndarray:
         """Hard-constrained family loss for B per-instance backbones: each

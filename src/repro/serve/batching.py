@@ -7,7 +7,7 @@ condenser, and solve/QoS knobs.  Two requests are *compatible* — batchable
 into one vmapped executable — exactly when they share the admission key
 
     (plan.static identity, lowered form signature, bc identity,
-     backend, method, tol, maxiter)
+     backend, SolverSpec)
 
 i.e. the same jit signature the core assembly/operator caches key on: only
 the coefficient leaf *values* and the RHS differ across a batch, so B
@@ -33,6 +33,7 @@ from typing import Any
 import jax.numpy as jnp
 
 from ..core import weakform
+from ..core.solvers import SolverSpec, resolve_solver_spec
 
 __all__ = [
     "SolveRequest",
@@ -77,9 +78,10 @@ class SolveRequest:
     rhs: jnp.ndarray               # assembled (n,) load vector
     bc: Any = None                 # DirichletCondenser | None (homogeneous)
     backend: str = "csr"           # "csr" | "matfree"
-    method: str = "cg"             # Krylov method
-    tol: float = 1e-10
-    maxiter: int = 10000
+    spec: SolverSpec | None = None  # Krylov config; part of the admission key
+    method: str | None = None      # deprecated → spec.method
+    tol: float | None = None       # deprecated → spec.tol (and atol)
+    maxiter: int | None = None     # deprecated → spec.maxiter
     timeout: float | None = None   # admission-queue deadline [s]
     request_id: int = dataclasses.field(
         default_factory=lambda: next(_REQUEST_IDS))
@@ -89,15 +91,28 @@ class SolveRequest:
             raise ValueError(
                 f"unknown backend {self.backend!r}: expected 'csr' or 'matfree'"
             )
-        spec, leaves = weakform.lower(self.form, weakform.MATRIX)
-        object.__setattr__(self, "_spec", spec)
+        # fold legacy per-field knobs into one hashable SolverSpec (the
+        # admission key carries the spec object, so every solver knob —
+        # including precond — separates compatibility classes)
+        spec = resolve_solver_spec(
+            self.spec, method=self.method, tol=self.tol, atol=self.tol,
+            maxiter=self.maxiter,
+            default=SolverSpec(method="cg", tol=1e-10, atol=1e-10,
+                               maxiter=10000),
+            where="SolveRequest")
+        object.__setattr__(self, "spec", spec)
+        object.__setattr__(self, "method", spec.method)
+        object.__setattr__(self, "tol", spec.tol)
+        object.__setattr__(self, "maxiter", spec.maxiter)
+        form_sig, leaves = weakform.lower(self.form, weakform.MATRIX)
+        object.__setattr__(self, "_form_sig", form_sig)
         object.__setattr__(
             self, "_leaves", tuple(jnp.asarray(lf) for lf in leaves))
 
     @property
-    def spec(self):
+    def form_sig(self):
         """The lowered (hashable) form signature — the batching key part."""
-        return self._spec
+        return self._form_sig
 
     @property
     def leaves(self) -> tuple:
@@ -172,15 +187,15 @@ class PendingSolve:
 def admission_key(req: SolveRequest) -> tuple:
     """The compatibility key: requests with equal keys batch into one
     executable.  Plan and condenser enter by *identity* (same convention as
-    the core jit caches — ``PlanStatic`` is identity-hashed)."""
+    the core jit caches — ``PlanStatic`` is identity-hashed); the frozen
+    :class:`~repro.core.SolverSpec` enters by value, so every solver knob
+    (method, tolerances, preconditioner) separates compatibility classes."""
     return (
         id(req.plan.static),
-        req.spec,
+        req.form_sig,
         id(req.bc) if req.bc is not None else None,
         req.backend,
-        req.method,
-        float(req.tol),
-        int(req.maxiter),
+        req.spec,
     )
 
 

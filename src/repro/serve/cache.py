@@ -42,31 +42,30 @@ def _build_executable(template, key):
     the stacked per-request arrays.
     """
     form, bc, backend = template.form, template.bc, template.backend
-    method, tol, maxiter = template.method, template.tol, template.maxiter
-    spec = template.spec
+    spec, form_sig = template.spec, template.form_sig
 
     if backend == "matfree":
 
         def _run(plan, leaves, rhs):
-            telemetry.count_trace("serve", plan.static, spec, backend=backend)
+            telemetry.count_trace("serve", plan.static, form_sig,
+                                  backend=backend)
             fam = matfree_family(plan, form, leaves_batch=leaves)
             if bc is not None:
                 fam = fam.condensed(bc)
                 rhs = rhs * bc.free_mask
-            return matfree_solve_batched(
-                fam, rhs, method, tol, tol, maxiter, return_info=True)
+            return matfree_solve_batched(fam, rhs, spec, return_info=True)
 
     else:
         from ..core.assembly import assemble_batched
 
         def _run(plan, leaves, rhs):
-            telemetry.count_trace("serve", plan.static, spec, backend=backend)
+            telemetry.count_trace("serve", plan.static, form_sig,
+                                  backend=backend)
             kb = assemble_batched(plan, form, leaves_batch=leaves)
             if bc is not None:
                 kb = bc.apply_matrix_only(kb)
                 rhs = rhs * bc.free_mask
-            return sparse_solve_batched(
-                kb, rhs, method, tol, tol, maxiter, return_info=True)
+            return sparse_solve_batched(kb, rhs, spec, return_info=True)
 
     return jax.jit(_run)
 

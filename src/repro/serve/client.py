@@ -53,8 +53,8 @@ def _poisson_workload(resolution: int):
 
 
 def poisson_requests(*, n_requests: int = 16, resolution: int = 16,
-                     backend: str = "csr", method: str = "cg",
-                     tol: float = 1e-10, timeout: float | None = None,
+                     backend: str = "csr", spec=None, method: str | None = None,
+                     tol: float | None = None, timeout: float | None = None,
                      seed: int = 0,
                      coeff_range=(0.5, 2.0)) -> list[SolveRequest]:
     """A family of heterogeneous-coefficient Poisson requests on ONE shared
@@ -73,8 +73,8 @@ def poisson_requests(*, n_requests: int = 16, resolution: int = 16,
         SolveRequest(
             plan=plan,
             form=wf.diffusion(rng.uniform(lo, hi, size=n_elems)),
-            rhs=rhs, bc=bc, backend=backend, method=method, tol=tol,
-            timeout=timeout,
+            rhs=rhs, bc=bc, backend=backend, spec=spec, method=method,
+            tol=tol, timeout=timeout,
         )
         for _ in range(n_requests)
     ]

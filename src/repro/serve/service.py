@@ -251,7 +251,8 @@ class SolveService:
         info_b = jax.tree_util.tree_map(
             lambda leaf: np.asarray(leaf)[:b], info_pad)
         telemetry.record_solve(
-            "serve.dispatch", info_b, method=template.method,
+            "serve.dispatch", info_b, method=template.spec.method,
+            precond=template.spec.precond_name,
             backend=template.backend, wall_us=1e6 * (t_done - t_dispatch),
             batch=b, padded=padded, cache_hit=cache_hit)
         policy = telemetry.nonconverged_policy()

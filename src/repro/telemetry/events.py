@@ -158,11 +158,14 @@ def check_convergence(info, where: str = "solve", on_fail: str | None = None):
 
 
 def record_solve(name: str, info, *, method: str | None = None,
-                 backend: str | None = None, phase: str = "forward",
+                 backend: str | None = None, precond: str | None = None,
+                 phase: str = "forward",
                  wall_us: float | None = None, **extra):
     """Record one solve event from a ``SolveInfo`` and fold it into the
     metrics (iteration histogram, optional wall-time histogram, solve
-    counter).  Tracer-safe no-op when disabled or under trace."""
+    counter).  ``precond`` labels the iteration histogram per
+    preconditioner, so convergence regressions show up per backend.
+    Tracer-safe no-op when disabled or under trace."""
     if not metrics.is_enabled():
         return None
     s = _summarize_info(info)
@@ -171,6 +174,8 @@ def record_solve(name: str, info, *, method: str | None = None,
     labels = {"solver": method or "?", "phase": phase}
     if backend:
         labels["backend"] = backend
+    if precond:
+        labels["precond"] = precond
     metrics.counter_inc("solves", s["n_solves"], **labels)
     metrics.histogram_observe("solve_iterations", s["iterations"], **labels)
     if wall_us is not None:
@@ -179,7 +184,7 @@ def record_solve(name: str, info, *, method: str | None = None,
             metrics.histogram_observe("solve_wall_us", float(w), **labels)
     return record_event(
         "solve", name, wall_us=wall_us, method=method, backend=backend,
-        phase=phase, **s, **extra,
+        precond=precond, phase=phase, **s, **extra,
     )
 
 

@@ -43,6 +43,7 @@ from ..core.matvec import make_matvec  # unified registry (compat re-export)
 from .newmark import NewmarkIntegrator
 from .newton import NewtonKrylovIntegrator
 from .stepping import axpy_csr, segmented_scan
+from ..core.solvers import SolverSpec
 from .theta import BACKWARD_EULER, CRANK_NICOLSON, ThetaIntegrator
 
 __all__ = [
@@ -90,7 +91,8 @@ def batched_theta_rollout(lhs_full, rhs_op, u0_batch, n_steps: int, *, dt,
     """
     if hasattr(lhs_full, "in_axes"):  # MatFreeFamily pair
         integrator_kwargs.setdefault("backend", "matfree")
-        integrator_kwargs.setdefault("solver", "cg")
+        if integrator_kwargs.get("solver") is None:
+            integrator_kwargs.setdefault("spec", SolverSpec(method="cg"))
 
         def one_mf(lhs_op, rhs_op_b, u0):
             integ = ThetaIntegrator(

@@ -30,7 +30,7 @@ import jax.numpy as jnp
 
 from ..core.boundary import DirichletCondenser
 from ..core.matvec import make_matvec
-from ..core.solvers import sparse_solve
+from ..core.solvers import SolverSpec, resolve_solver_spec, sparse_solve
 from ..core.sparse import CSR
 from ..telemetry import events
 from .stepping import axpy_csr, segmented_scan
@@ -46,9 +46,10 @@ class NewmarkIntegrator:
     beta: float = 0.25
     gamma: float = 0.5
     bc: DirichletCondenser | None = None
-    solver: str = "cg"          # M + βΔt²K is SPD
-    tol: float = 1e-10
-    maxiter: int = 10000
+    spec: SolverSpec | None = None  # Krylov config (method/tol/precond/...)
+    solver: str | None = None       # deprecated → spec.method
+    tol: float | None = None        # deprecated → spec.tol (and atol)
+    maxiter: int | None = None      # deprecated → spec.maxiter
     # inner K·u matvec backend (unified registry, repro.core.matvec): the
     # predictor RHS runs two stiffness applies per step — "ell"/"ell_pallas"
     # switch them to the padded layout / Pallas kernel (the solve itself
@@ -56,6 +57,14 @@ class NewmarkIntegrator:
     backend: str = "csr"
 
     def __post_init__(self):
+        # M + βΔt²K is SPD → CG default
+        self.spec = resolve_solver_spec(
+            self.spec, method=self.solver, tol=self.tol, atol=self.tol,
+            maxiter=self.maxiter, default=SolverSpec(method="cg"),
+            where="NewmarkIntegrator")
+        self.solver = self.spec.method
+        self.tol = self.spec.tol
+        self.maxiter = self.spec.maxiter
         self.lhs_full = axpy_csr(
             1.0, self.mass, self.beta * self.dt**2, self.stiff
         )
@@ -75,9 +84,7 @@ class NewmarkIntegrator:
         r = -self._stiff_mv(u0)
         if load0 is not None:
             r = r + load0
-        return sparse_solve(
-            self.mass_c, self._mask(r), self.solver, self.tol, self.tol, self.maxiter
-        )
+        return sparse_solve(self.mass_c, self._mask(r), self.spec)
 
     def step(self, u, v, a, load=None, return_info=False):
         dt, beta, gamma = self.dt, self.beta, self.gamma
@@ -86,10 +93,8 @@ class NewmarkIntegrator:
         rhs = -self._stiff_mv(u_star)
         if load is not None:
             rhs = rhs + load
-        out = sparse_solve(
-            self.lhs, self._mask(rhs), self.solver, self.tol, self.tol,
-            self.maxiter, return_info=return_info,
-        )
+        out = sparse_solve(self.lhs, self._mask(rhs), self.spec,
+                           return_info=return_info)
         a_new, info = out if return_info else (out, None)
         u_new = u_star + beta * dt**2 * a_new
         if self.bc is not None:
@@ -138,8 +143,9 @@ class NewmarkIntegrator:
         if return_info:
             u_traj, v_traj, info = ys
             events.check_convergence(info, where="newmark.rollout")
-            events.record_solve("newmark.rollout", info, method=self.solver,
-                                backend=self.backend)
+            events.record_solve("newmark.rollout", info,
+                                method=self.spec.method, backend=self.backend,
+                                precond=self.spec.precond_name)
             out = (u_traj, v_traj) if return_velocity else u_traj
             return out, info
         u_traj, v_traj = ys

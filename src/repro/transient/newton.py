@@ -32,7 +32,7 @@ import jax.numpy as jnp
 from ..core import weakform as wf
 from ..core.assembly import GalerkinAssembler
 from ..core.boundary import DirichletCondenser
-from ..core.solvers import SolveInfo, sparse_solve
+from ..core.solvers import SolveInfo, SolverSpec, resolve_solver_spec, sparse_solve
 from ..core.sparse import CSR
 from ..telemetry import events
 from .stepping import axpy_csr, segmented_scan
@@ -60,11 +60,20 @@ class NewtonKrylovIntegrator:
     diffusion_scale: float = 1.0            # κ multiplying K
     bc: DirichletCondenser | None = None
     newton_iters: int = 3
-    solver: str = "cg"                      # J is symmetric (mass-weighted terms)
-    tol: float = 1e-10
-    maxiter: int = 10000
+    spec: SolverSpec | None = None          # Krylov config
+    solver: str | None = None               # deprecated → spec.method
+    tol: float | None = None                # deprecated → spec.tol (and atol)
+    maxiter: int | None = None              # deprecated → spec.maxiter
 
     def __post_init__(self):
+        # J is symmetric (mass-weighted terms) → CG default
+        self.spec = resolve_solver_spec(
+            self.spec, method=self.solver, tol=self.tol, atol=self.tol,
+            maxiter=self.maxiter, default=SolverSpec(method="cg"),
+            where="NewtonKrylovIntegrator")
+        self.solver = self.spec.method
+        self.tol = self.spec.tol
+        self.maxiter = self.spec.maxiter
         if self.reaction_prime is None:
             self.reaction_prime = _pointwise_derivative(self.reaction)
         # linear part of the Jacobian / residual operator: M/Δt + κK
@@ -97,10 +106,8 @@ class NewtonKrylovIntegrator:
         def newton(u, _):
             res = self.residual(u_prev, u)
             jac = self._jacobian(u)
-            out = sparse_solve(
-                jac, res, self.solver, self.tol, self.tol, self.maxiter,
-                return_info=return_info,
-            )
+            out = sparse_solve(jac, res, self.spec,
+                               return_info=return_info)
             du, info = out if return_info else (out, None)
             return u - du, info
 
@@ -137,7 +144,8 @@ class NewtonKrylovIntegrator:
         if return_info:
             traj, info = out
             events.check_convergence(info, where="newton.rollout")
-            events.record_solve("newton.rollout", info, method=self.solver,
-                                backend="csr")
+            events.record_solve("newton.rollout", info,
+                                method=self.spec.method, backend="csr",
+                                precond=self.spec.precond_name)
             return traj, info
         return out

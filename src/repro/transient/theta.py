@@ -30,7 +30,14 @@ import jax.numpy as jnp
 
 from ..core.boundary import DirichletCondenser
 from ..core.matvec import make_matvec
-from ..core.solvers import cg, jacobi_preconditioner, matfree_solve, sparse_solve
+from ..core.solvers import (
+    SolverSpec,
+    _method,
+    make_preconditioner,
+    matfree_solve,
+    resolve_solver_spec,
+    sparse_solve,
+)
 from ..core.sparse import CSR
 from ..telemetry import events
 from .stepping import axpy_csr, segmented_scan
@@ -70,9 +77,10 @@ class ThetaIntegrator:
     dt: float
     theta: float = BACKWARD_EULER
     bc: DirichletCondenser | None = None
-    solver: str = "cg"          # M + θΔtK is SPD for θ ≥ 0
-    tol: float = 1e-10
-    maxiter: int = 10000
+    spec: SolverSpec | None = None  # Krylov config (method/tol/precond/...)
+    solver: str | None = None       # deprecated → spec.method
+    tol: float | None = None        # deprecated → spec.tol (and atol)
+    maxiter: int | None = None      # deprecated → spec.maxiter
     backend: str = "csr"
     # effective operators; pass directly (see from_form) or leave None to
     # have them formed from mass/stiff (same pattern as M / K)
@@ -80,6 +88,16 @@ class ThetaIntegrator:
     rhs_op: CSR | None = None
 
     def __post_init__(self):
+        # M + θΔtK is SPD for θ ≥ 0 → CG default; legacy solver/tol/maxiter
+        # fields fold into the spec (DeprecationWarning) and stay readable
+        # as mirrors afterwards
+        self.spec = resolve_solver_spec(
+            self.spec, method=self.solver, tol=self.tol, atol=self.tol,
+            maxiter=self.maxiter, default=SolverSpec(method="cg"),
+            where="ThetaIntegrator")
+        self.solver = self.spec.method
+        self.tol = self.spec.tol
+        self.maxiter = self.spec.maxiter
         if self.lhs_full is None:
             self.lhs_full = axpy_csr(1.0, self.mass, self.theta * self.dt, self.stiff)
         if self.rhs_op is None:
@@ -104,7 +122,7 @@ class ThetaIntegrator:
         if self.backend not in ("csr", "matfree", "matfree_sharded"):
             self._lhs_mv = make_matvec(self.lhs, self.backend)
             self._rhs_mv = make_matvec(self.rhs_op, self.backend)
-            self._precond = jacobi_preconditioner(self.lhs)
+            self._precond = make_preconditioner(self.lhs, self.spec.precond)
 
     @classmethod
     def from_form(cls, asm, form, dt, *, theta: float = BACKWARD_EULER,
@@ -129,9 +147,12 @@ class ThetaIntegrator:
         from ..core import weakform as wf
 
         terms = wf._as_form(form).terms
-        kw.setdefault(
-            "solver", "bicgstab" if any(t.kind == "advection" for t in terms) else "cg"
-        )
+        if kw.get("spec") is None and kw.get("solver") is None:
+            # advection makes the lhs nonsymmetric → BiCGStab; CG otherwise
+            kw["spec"] = SolverSpec(
+                method="bicgstab"
+                if any(t.kind == "advection" for t in terms) else "cg"
+            )
         lhs_form = wf.mass(mass_coeff) + (theta * dt) * form
         rhs_form = wf.mass(mass_coeff) + (-(1.0 - theta) * dt) * form
         if kw.get("backend") in ("matfree", "matfree_sharded"):
@@ -171,19 +192,16 @@ class ThetaIntegrator:
         else:
             b = self.bc.lift(self.lhs_full, b, bc_values)
         if self.backend == "csr":
-            return sparse_solve(
-                self.lhs, b, self.solver, self.tol, self.tol, self.maxiter,
-                return_info=return_info,
-            )
+            return sparse_solve(self.lhs, b, self.spec,
+                                return_info=return_info)
         if self.backend in ("matfree", "matfree_sharded"):
             # differentiable adjoint solve on the matrix-free operator
             # (sharded: the same solve with every apply spanning the mesh)
-            return matfree_solve(
-                self.lhs, b, self.solver, self.tol, self.tol, self.maxiter,
-                return_info=return_info,
-            )
-        u_new, info = cg(self._lhs_mv, b, x0=u, tol=self.tol, atol=self.tol,
-                         maxiter=self.maxiter, m=self._precond)
+            return matfree_solve(self.lhs, b, self.spec,
+                                 return_info=return_info)
+        u_new, info = _method(self.spec.method)(
+            self._lhs_mv, b, x0=u, tol=self.spec.tol, atol=self.spec.atol,
+            maxiter=self.spec.maxiter, m=self._precond)
         if return_info:
             return u_new, jax.lax.stop_gradient(info)
         return u_new
@@ -246,7 +264,8 @@ class ThetaIntegrator:
         if return_info:
             traj, info = out
             events.check_convergence(info, where="theta.rollout")
-            events.record_solve("theta.rollout", info, method=self.solver,
-                                backend=self.backend)
+            events.record_solve("theta.rollout", info, method=self.spec.method,
+                                backend=self.backend,
+                                precond=self.spec.precond_name)
             return traj, info
         return out

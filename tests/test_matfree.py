@@ -27,6 +27,7 @@ from repro.core import (
     make_matvec,
     make_residual,
     matfree_operator,
+    SolverSpec,
     matfree_solve,
     n_matfree_traces,
     sparse_solve,
@@ -39,6 +40,7 @@ from repro.core.mesh import element_for_mesh, rectangle_quad
 from repro.core.operator import _apply_jit  # noqa: F401 (retrace counter target)
 
 RNG = np.random.default_rng(0)
+_SPEC = SolverSpec(method="cg", tol=1e-12, atol=1e-12, maxiter=10000)
 
 
 def _space(mesh, degree=1, value_size=1):
@@ -177,12 +179,12 @@ def cube_problem():
 
 def _solve_mf(plan, bc, f, rho):
     op = matfree_operator(plan, wf.diffusion(rho)).condensed(bc)
-    return matfree_solve(op, f, "cg", 1e-12, 1e-12, 10000)
+    return matfree_solve(op, f, _SPEC)
 
 
 def _solve_csr(plan, bc, f, rho):
     k = bc.apply_matrix_only(assemble(plan, wf.diffusion(rho)))
-    return sparse_solve(k, f, "cg", 1e-12, 1e-12, 10000)
+    return sparse_solve(k, f, _SPEC)
 
 
 def test_matfree_solve_matches_assembled_3d(cube_problem):
@@ -409,11 +411,11 @@ def test_matfree_solve_on_csr_matches_sparse_solve():
 
     def solve_generic(r):
         k = bc.apply_matrix_only(assemble(plan, wf.diffusion(r)))
-        return matfree_solve(k, f, "cg", 1e-12, 1e-12, 10000)
+        return matfree_solve(k, f, _SPEC)
 
     def solve_sparse(r):
         k = bc.apply_matrix_only(assemble(plan, wf.diffusion(r)))
-        return sparse_solve(k, f, "cg", 1e-12, 1e-12, 10000)
+        return sparse_solve(k, f, _SPEC)
 
     np.testing.assert_allclose(
         np.asarray(solve_generic(rho)), np.asarray(solve_sparse(rho)), atol=1e-10
@@ -438,7 +440,7 @@ def test_hex_mesh_poisson_sanity():
     bc = DirichletCondenser(plan.static.mat_routing, space.boundary_dofs())
     k = bc.apply_matrix_only(assemble(plan, wf.diffusion()))
     f = bc.project_residual(assemble_rhs(plan, wf.source(1.0)))
-    u = sparse_solve(k, f, "cg", 1e-12, 1e-12, 10000)
+    u = sparse_solve(k, f, _SPEC)
     # interior solution of -Δu = 1 on the unit cube is positive, max ≈ 0.056
     assert float(jnp.min(u)) >= 0.0
     assert 0.03 < float(jnp.max(u)) < 0.09
@@ -538,15 +540,15 @@ def test_family_solve_matches_sequential_and_batched_csr():
     f = f * bc.free_mask
     fam = matfree_family(plan, wf.diffusion(rho_b[0]),
                          leaves_batch=(rho_b, None)).condensed(bc)
-    x = matfree_solve_batched(fam, f, "cg", 1e-12, 1e-12, 10000)
+    x = matfree_solve_batched(fam, f, _SPEC)
     kb = bc.apply_matrix_only(assemble_batched(
         plan, wf.diffusion(rho_b[0]), leaves_batch=(rho_b, None)))
     from repro.core import sparse_solve_batched
-    x_csr = sparse_solve_batched(kb, f, "cg", 1e-12, 1e-12, 10000)
+    x_csr = sparse_solve_batched(kb, f, _SPEC)
     np.testing.assert_allclose(np.asarray(x), np.asarray(x_csr), atol=1e-9)
     for b in range(fam.batch):
         opc = matfree_operator(plan, wf.diffusion(rho_b[b])).condensed(bc)
-        xb = matfree_solve(opc, f[b], "cg", 1e-12, 1e-12, 10000)
+        xb = matfree_solve(opc, f[b], _SPEC)
         np.testing.assert_allclose(np.asarray(x[b]), np.asarray(xb),
                                    atol=1e-9)
 
@@ -573,15 +575,14 @@ def test_family_grad_matches_per_instance_adjoints():
     def loss_family(rb):
         fam = matfree_family(plan, wf.diffusion(rb[0]),
                              leaves_batch=(rb, None)).condensed(bc)
-        return jnp.sum(matfree_solve_batched(fam, f, "cg", 1e-12, 1e-12,
-                                             10000) ** 2)
+        return jnp.sum(matfree_solve_batched(fam, f, _SPEC) ** 2)
 
     def loss_sequential(rb):
         tot = 0.0
         for b in range(rb.shape[0]):
             opc = matfree_operator(plan, wf.diffusion(rb[b])).condensed(bc)
             tot = tot + jnp.sum(
-                matfree_solve(opc, f, "cg", 1e-12, 1e-12, 10000) ** 2)
+                matfree_solve(opc, f, _SPEC) ** 2)
         return tot
 
     g1 = jax.grad(loss_family)(rho_b)

@@ -16,6 +16,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  Module → paper artifact map:
   bench_matfree            — matrix-free apply/solve vs assembled CSR
   bench_precond            — elemalg preconditioners + static condensation
   bench_serve              — repro.serve admission batching vs sequential
+  bench_telemetry          — spans/telemetry overhead on the hot solve path
   bench_dryrun_roofline    — harness roofline table (from dry-run JSON)
 
 Usage:
@@ -65,6 +66,7 @@ def main(argv=None) -> None:
         bench_precond,
         bench_serve,
         bench_solver_scaling,
+        bench_telemetry,
         bench_topo_opt,
         bench_transient,
         bench_weakform,
@@ -86,6 +88,7 @@ def main(argv=None) -> None:
         bench_matfree,
         bench_precond,
         bench_serve,
+        bench_telemetry,
         bench_dryrun_roofline,
     ]
     if args.only:

@@ -10,7 +10,12 @@ Exercises the full observability path on a small 3D Poisson problem:
 3. ``export_jsonl`` flushes the metrics registry next to the streamed
    events, and the JSONL is then *parsed back* and asserted to contain
    solve rows with ``converged == true`` and assembly rows,
-4. the report CLI renders the log without error.
+4. the report CLI renders the log without error,
+5. an instrumented :class:`~repro.serve.SolveService` window under a
+   defined SLO: every answered request must carry a span tree whose
+   top-level segments cover its e2e wall, the span rows must land in the
+   JSONL stream, a forced non-converged wave must auto-dump the flight
+   recorder, and ``report --slo`` must render the attainment table.
 
 Exit code 0 only if every check passes — this is the CI leg that keeps the
 telemetry layer honest (a refactor that silently stops recording fails
@@ -84,10 +89,61 @@ def main(argv=None) -> int:
     rc = report.main([args.jsonl, "--snapshot"])
     assert rc == 0, f"report CLI failed with exit code {rc}"
 
+    # --- instrumented serve window: spans + flight recorder + SLO gate ---
+    import dataclasses
+
+    from repro import serve
+    from repro.serve import SolveService
+
+    telemetry.define_slo("serve_p99", p99_us=60e6, histogram="serve_e2e_us")
+    flight_path = args.jsonl + ".flight.jsonl"
+    if os.path.exists(flight_path):
+        os.remove(flight_path)
+
+    reqs = serve.poisson_requests(n_requests=6, resolution=8)
+    with SolveService(window=0.002) as svc:
+        svc.warmup(reqs[0], batch_sizes=(1, 2, 4))
+        load = serve.open_loop_load(svc, reqs, rate=500.0)
+    assert load.ok == len(reqs), f"serve window lost requests: {load}"
+    assert load.span_coverage > 0.95, (
+        f"span segments cover only {load.span_coverage:.2%} of e2e")
+
+    # a forced non-converged wave must auto-dump the flight recorder
+    bad = [dataclasses.replace(r, maxiter=3)
+           for r in serve.poisson_requests(n_requests=2, resolution=8)]
+    svc2 = SolveService(window=0.0)
+    pend = [svc2.submit(r) for r in bad]
+    svc2.drain()
+    assert all(p.response().status == "nonconverged" for p in pend)
+    assert os.path.exists(flight_path), "flight recorder did not auto-dump"
+    flight_rows = _load_rows(flight_path)
+    reasons = {r["reason"] for r in flight_rows if r["kind"] == "flight_dump"}
+    assert "nonconverged" in reasons, f"no nonconverged dump (saw {reasons})"
+    nonconv = [r for r in flight_rows
+               if r["kind"] == "flight" and r.get("outcome") == "nonconverged"]
+    assert nonconv and all(r["trace"]["name"] == "serve.request"
+                           for r in nonconv), nonconv
+
+    telemetry.export_jsonl(args.jsonl)
+    rows = _load_rows(args.jsonl)
+    span_rows = [r for r in rows if r.get("kind") == "span"]
+    req_spans = [r for r in span_rows if r["name"] == "span/serve.request"]
+    assert req_spans, f"no serve.request span rows in {args.jsonl}"
+    segs = {r["name"] for r in span_rows if r.get("parent_id") is not None}
+    assert {"span/queue_wait", "span/solve"} <= segs, segs
+    slo_rows = [r for r in rows if r.get("kind") == "slo"]
+    assert slo_rows and slo_rows[-1]["met"], f"SLO rows wrong: {slo_rows}"
+
+    rc = report.main([args.jsonl, "--slo"])
+    assert rc == 0, f"report --slo failed with exit code {rc}"
+
     print(
         f"telemetry smoke OK: {len(solves)} solve rows (converged), "
         f"{len(assemblies)} assembly rows, {len(metrics)} metric rows, "
-        f"{len(trace_files)} trace files, matfree-vs-csr err {err:.2e}"
+        f"{len(trace_files)} trace files, matfree-vs-csr err {err:.2e}, "
+        f"{len(req_spans)} request span trees "
+        f"(coverage {load.span_coverage:.1%}), "
+        f"{len(nonconv)} flight records dumped"
     )
     return 0
 

@@ -49,7 +49,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..telemetry import events
+from ..telemetry import annotate, events
 from .assembly import reduce_vector
 from .solvers import (
     SolverSpec,
@@ -369,8 +369,9 @@ class CondensedSystem:
 
     # -- the Schur apply --------------------------------------------------
     def matvec(self, xb):
-        yi, _ = self.ii_solve(self.kib_matvec(xb))
-        return self.kbb_matvec(xb) - self.kbi_matvec(yi)
+        with annotate("tg.elemalg.schur_apply"):
+            yi, _ = self.ii_solve(self.kib_matvec(xb))
+            return self.kbb_matvec(xb) - self.kbi_matvec(yi)
 
     rmatvec = matvec  # condensation requires a symmetric operator
 
@@ -430,25 +431,26 @@ def condense(op, split: DofSplit, inner: SolverSpec | None = None,
     :class:`DofSplit` — see :class:`CondensedSystem`."""
     base = _base_op(op)
     sc = _scaffold(base, split)
-    k_e = masked_element_matrices(base)
-    if transpose:
-        k_e = jnp.swapaxes(k_e, -1, -2)
-    bs, is_ = split.interface_slots, split.interior_slots
-    kbb = block_partition(k_e, bs)
-    kbi = block_partition(k_e, bs, is_)
-    kib = block_partition(k_e, is_, bs)
-    kii = block_partition(k_e, is_)
-    diag = cached_diagonal(base)
-    diag_b = diag[_dev(sc.interface_dofs)]
-    diag_i = diag[_dev(sc.interior_dofs)]
-    # regularized interior blocks for the inner EbE preconditioner:
-    # I + s K_ii s is symmetric positive definite whenever K_e is PSD
-    inv_i = jnp.where(jnp.abs(diag) > 0, 1.0 / jnp.abs(diag), 1.0)
-    s_e = jnp.sqrt(_gather(inv_i[_dev(sc.interior_dofs)], _dev(sc.cell_i)))
-    c_e = jnp.eye(kii.shape[-1], dtype=kii.dtype) + (
-        s_e[:, :, None] * kii * s_e[:, None, :]
-    )
-    ii_factors = factorize(c_e, spd=base.is_spd())
+    with annotate("tg.elemalg.condense"):
+        k_e = masked_element_matrices(base)
+        if transpose:
+            k_e = jnp.swapaxes(k_e, -1, -2)
+        bs, is_ = split.interface_slots, split.interior_slots
+        kbb = block_partition(k_e, bs)
+        kbi = block_partition(k_e, bs, is_)
+        kib = block_partition(k_e, is_, bs)
+        kii = block_partition(k_e, is_)
+        diag = cached_diagonal(base)
+        diag_b = diag[_dev(sc.interface_dofs)]
+        diag_i = diag[_dev(sc.interior_dofs)]
+        # regularized interior blocks for the inner EbE preconditioner:
+        # I + s K_ii s is symmetric positive definite whenever K_e is PSD
+        inv_i = jnp.where(jnp.abs(diag) > 0, 1.0 / jnp.abs(diag), 1.0)
+        s_e = jnp.sqrt(_gather(inv_i[_dev(sc.interior_dofs)], _dev(sc.cell_i)))
+        c_e = jnp.eye(kii.shape[-1], dtype=kii.dtype) + (
+            s_e[:, :, None] * kii * s_e[:, None, :]
+        )
+        ii_factors = factorize(c_e, spd=base.is_spd())
     return CondensedSystem(
         op=base, split=split, kbb=kbb, kbi=kbi, kib=kib, kii=kii,
         ii_factors=ii_factors, diag_b=diag_b, diag_i=diag_i, sc=sc,
@@ -562,13 +564,14 @@ def ebe_preconditioner(op, *, theta: float = 0.25):
     fm = base.free_mask
 
     def m(x):
-        xe = (x * dinv_sqrt)[cd]
-        y = reduce_vector(fac.solve(xe), st.vec_routing, st.reduce_mode)
-        y = y * dinv_sqrt
-        if fm is not None:
-            mask = fm.astype(x.dtype)
-            y = mask * y + (1.0 - mask) * x
-        return y
+        with annotate("tg.precond.ebe_apply"):
+            xe = (x * dinv_sqrt)[cd]
+            y = reduce_vector(fac.solve(xe), st.vec_routing, st.reduce_mode)
+            y = y * dinv_sqrt
+            if fm is not None:
+                mask = fm.astype(x.dtype)
+                y = mask * y + (1.0 - mask) * x
+            return y
 
     return m
 
@@ -613,17 +616,18 @@ def chebyshev_preconditioner(op, *, degree: int = 3, power_iters: int = 10,
 
     def m(r):
         # classical Chebyshev iteration for A z = r, z₀ = 0 (Jacobi-scaled)
-        rho = 1.0 / sigma
-        dz = dinv * r / theta
-        z = dz
-        res = r - matvec(dz)
-        for _ in range(degree - 1):
-            rho_new = 1.0 / (2.0 * sigma - rho)
-            dz = rho_new * rho * dz + (2.0 * rho_new / delta) * (dinv * res)
-            rho = rho_new
-            z = z + dz
-            res = res - matvec(dz)
-        return z
+        with annotate("tg.precond.chebyshev_apply"):
+            rho = 1.0 / sigma
+            dz = dinv * r / theta
+            z = dz
+            res = r - matvec(dz)
+            for _ in range(degree - 1):
+                rho_new = 1.0 / (2.0 * sigma - rho)
+                dz = rho_new * rho * dz + (2.0 * rho_new / delta) * (dinv * res)
+                rho = rho_new
+                z = z + dz
+                res = res - matvec(dz)
+            return z
 
     return m
 

@@ -56,7 +56,7 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from ..telemetry import annotate, events
+from ..telemetry import annotate, events, spans
 from .sparse import CSR, BatchedCSR, _dev, cached_diagonal
 
 __all__ = [
@@ -401,13 +401,17 @@ def sparse_solve(a: CSR, b, spec: SolverSpec | None = None, *legacy,
     spec = resolve_solver_spec(spec, legacy, method=method, tol=tol,
                                atol=atol, maxiter=maxiter, precond=precond,
                                default=_SPARSE_DEFAULT, where="sparse_solve")
-    out = _sparse_solve(a, b, spec, bool(return_info))
-    if return_info:
-        x, info = out
-        events.record_solve("sparse_solve", info, method=spec.method,
-                            backend="csr", precond=spec.precond_name)
-        return x, info
-    return out
+    # span-aware eager boundary: the solve (host dispatch wall) becomes a
+    # span — child of any open request/driver span — and the record_solve
+    # event inherits its trace identity
+    with spans.span("sparse_solve", method=spec.method, backend="csr"):
+        out = _sparse_solve(a, b, spec, bool(return_info))
+        if return_info:
+            x, info = out
+            events.record_solve("sparse_solve", info, method=spec.method,
+                                backend="csr", precond=spec.precond_name)
+            return x, info
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -469,13 +473,14 @@ def matfree_solve(op, b, spec: SolverSpec | None = None, *legacy,
     spec = resolve_solver_spec(spec, legacy, method=method, tol=tol,
                                atol=atol, maxiter=maxiter, precond=precond,
                                default=_MATFREE_DEFAULT, where="matfree_solve")
-    out = _matfree_solve(op, b, spec, bool(return_info))
-    if return_info:
-        x, info = out
-        events.record_solve("matfree_solve", info, method=spec.method,
-                            backend="matfree", precond=spec.precond_name)
-        return x, info
-    return out
+    with spans.span("matfree_solve", method=spec.method, backend="matfree"):
+        out = _matfree_solve(op, b, spec, bool(return_info))
+        if return_info:
+            x, info = out
+            events.record_solve("matfree_solve", info, method=spec.method,
+                                backend="matfree", precond=spec.precond_name)
+            return x, info
+        return out
 
 
 def matfree_solve_batched(family, b, spec: SolverSpec | None = None, *legacy,
@@ -498,16 +503,19 @@ def matfree_solve_batched(family, b, spec: SolverSpec | None = None, *legacy,
                                where="matfree_solve_batched")
     b = jnp.asarray(b)
     in_b = None if b.ndim == 1 else 0
-    out = jax.vmap(
-        lambda op, bi: _matfree_solve(op, bi, spec, bool(return_info)),
-        in_axes=(family.in_axes(), in_b),
-    )(family.op, b)
-    if return_info:
-        x, info = out
-        events.record_solve("matfree_solve_batched", info, method=spec.method,
-                            backend="matfree", precond=spec.precond_name)
-        return x, info
-    return out
+    with spans.span("matfree_solve_batched", method=spec.method,
+                    backend="matfree"):
+        out = jax.vmap(
+            lambda op, bi: _matfree_solve(op, bi, spec, bool(return_info)),
+            in_axes=(family.in_axes(), in_b),
+        )(family.op, b)
+        if return_info:
+            x, info = out
+            events.record_solve("matfree_solve_batched", info,
+                                method=spec.method, backend="matfree",
+                                precond=spec.precond_name)
+            return x, info
+        return out
 
 
 def sparse_solve_batched(a: BatchedCSR, b, spec: SolverSpec | None = None,
@@ -526,13 +534,17 @@ def sparse_solve_batched(a: BatchedCSR, b, spec: SolverSpec | None = None,
                                where="sparse_solve_batched")
     b = jnp.asarray(b)
     in_b = None if b.ndim == 1 else 0
-    out = jax.vmap(
-        lambda ab, bi: _sparse_solve(ab.as_csr(), bi, spec, bool(return_info)),
-        in_axes=(0, in_b),
-    )(a, b)
-    if return_info:
-        x, info = out
-        events.record_solve("sparse_solve_batched", info, method=spec.method,
-                            backend="csr", precond=spec.precond_name)
-        return x, info
-    return out
+    with spans.span("sparse_solve_batched", method=spec.method,
+                    backend="csr"):
+        out = jax.vmap(
+            lambda ab, bi: _sparse_solve(ab.as_csr(), bi, spec,
+                                         bool(return_info)),
+            in_axes=(0, in_b),
+        )(a, b)
+        if return_info:
+            x, info = out
+            events.record_solve("sparse_solve_batched", info,
+                                method=spec.method, backend="csr",
+                                precond=spec.precond_name)
+            return x, info
+        return out

@@ -34,6 +34,7 @@ import jax.numpy as jnp
 
 from ..core import weakform
 from ..core.solvers import SolverSpec, resolve_solver_spec
+from ..telemetry.spans import NULL_SPAN
 
 __all__ = [
     "SolveRequest",
@@ -136,10 +137,24 @@ class SolveResponse:
     t_submit: float = 0.0
     t_dispatch: float = 0.0
     t_done: float = 0.0
+    trace: dict | None = None      # span tree (telemetry on) — see spans.py
 
     @property
     def ok(self) -> bool:
         return self.status == "ok"
+
+    @property
+    def span_segments_us(self) -> dict:
+        """Top-level segment walls (µs) of the carried span tree — e.g.
+        ``{"queue_wait": ..., "dispatch": ..., "solve": ..., "slice": ...}``
+        summing to the end-to-end latency.  Empty without telemetry."""
+        if not self.trace:
+            return {}
+        return {
+            c["name"]: c["wall_us"]
+            for c in self.trace.get("children", ())
+            if c.get("wall_us") is not None
+        }
 
     @property
     def queue_wait_s(self) -> float:
@@ -155,6 +170,9 @@ class PendingSolve:
 
     def __init__(self, request: SolveRequest):
         self.request = request
+        # the request's root span, set by SolveService.submit() when
+        # telemetry is on (NULL_SPAN otherwise: every span call is a no-op)
+        self.span = NULL_SPAN
         self._event = threading.Event()
         self._response: SolveResponse | None = None
 

@@ -21,6 +21,7 @@ traced body — the exact counters the serving SLO gate reads.
 
 from __future__ import annotations
 
+import time
 from collections import OrderedDict
 
 import jax
@@ -30,6 +31,65 @@ from ..core.operator import matfree_family
 from ..core.solvers import matfree_solve_batched, sparse_solve_batched
 
 __all__ = ["ExecutableCache"]
+
+
+def _entry_tag(full_key) -> str:
+    """Stable short label for one cache entry's gauges."""
+    (key, padded) = full_key
+    return f"{hash(key) & 0xFFFFFFFF:08x}/B{padded}"
+
+
+def _sample_device_memory() -> None:
+    """Record live device-memory gauges (``device_bytes_in_use`` etc.) from
+    ``Device.memory_stats()`` where the backend provides it — CPU devices
+    typically return ``None``/``{}`` and are skipped (graceful fallback)."""
+    if not telemetry.is_enabled():
+        return
+    try:
+        devices = jax.local_devices()
+    except Exception:
+        return
+    for d in devices:
+        stats_fn = getattr(d, "memory_stats", None)
+        if stats_fn is None:
+            continue
+        try:
+            stats = stats_fn()
+        except Exception:
+            continue
+        if not stats:
+            continue
+        label = f"{d.platform}:{d.id}"
+        for field in ("bytes_in_use", "peak_bytes_in_use", "bytes_limit"):
+            if field in stats:
+                telemetry.gauge_set(f"device_{field}", float(stats[field]),
+                                    device=label)
+
+
+def _instrument_compile(fn, full_key, backend):
+    """Wrap a freshly built executable so its first invocation — the one
+    that compiles — is attributed: ``serve_compile_us`` histogram, a
+    per-entry ``serve_exec_compile_us`` gauge, and a device-memory sample
+    once the executable is resident.  Steady-state calls pay one list
+    check."""
+    pending = [True]
+
+    def wrapper(plan, leaves, rhs):
+        if not pending:
+            return fn(plan, leaves, rhs)
+        pending.clear()
+        t0 = time.perf_counter()
+        out = fn(plan, leaves, rhs)
+        jax.block_until_ready(out)
+        wall_us = 1e6 * (time.perf_counter() - t0)
+        telemetry.histogram_observe("serve_compile_us", wall_us,
+                                    backend=backend)
+        telemetry.gauge_set("serve_exec_compile_us", wall_us,
+                            entry=_entry_tag(full_key))
+        _sample_device_memory()
+        return out
+
+    return wrapper
 
 
 def _build_executable(template, key):
@@ -103,8 +163,10 @@ class ExecutableCache:
             self._entries.move_to_end(full_key)
             return self._entries[full_key], True
         self.misses += 1
-        fn = _build_executable(template, key)
+        fn = _instrument_compile(
+            _build_executable(template, key), full_key, template.backend)
         self._entries[full_key] = fn
+        telemetry.gauge_set("serve_exec_entries", len(self._entries))
         self._evict()
         return fn, False
 
@@ -119,11 +181,18 @@ class ExecutableCache:
 
     def _evict(self) -> None:
         unpinned = [k for k in self._entries if k not in self._pinned]
+        evicted = False
         while len(unpinned) > self.capacity:
             victim = unpinned.pop(0)  # least recently used unpinned entry
             del self._entries[victim]
             self.evictions += 1
+            evicted = True
             telemetry.counter_inc("serve_cache_evictions")
+            telemetry.gauge_set("serve_exec_compile_us", 0.0,
+                                entry=_entry_tag(victim))
+        if evicted:
+            telemetry.gauge_set("serve_exec_entries", len(self._entries))
+            _sample_device_memory()
 
     def clear(self) -> None:
         self._entries.clear()

@@ -97,6 +97,11 @@ class LoadReport:
     queue_wait_p50_us: float
     batch_size_mean: float
     cache_hit_rate: float
+    queue_depth_max: float = float("nan")
+    # median over answered requests of (Σ top-level span segment walls) /
+    # (t_done - t_submit): ≈1.0 when the span trees account for the full
+    # request lifetime; NaN with telemetry off (no traces carried)
+    span_coverage: float = float("nan")
 
     @property
     def throughput(self) -> float:
@@ -140,6 +145,12 @@ def open_loop_load(service, requests, *, rate: float,
         by_status[r.status] = by_status.get(r.status, 0) + 1
     snap = telemetry.snapshot() if telemetry.is_enabled() else {
         "histograms": {}, "counters": {}, "gauges": {}}
+    coverages = [
+        sum(r.span_segments_us.values()) / (1e6 * r.e2e_s)
+        for r in responses
+        if r.trace and r.span_segments_us and r.e2e_s > 0
+    ]
+    coverage = float(np.median(coverages)) if coverages else float("nan")
     return LoadReport(
         offered=len(requests),
         ok=by_status.get("ok", 0),
@@ -153,4 +164,6 @@ def open_loop_load(service, requests, *, rate: float,
         queue_wait_p50_us=_hist(snap, "serve_queue_wait_us", "p50"),
         batch_size_mean=_hist(snap, "serve_batch_size", "mean"),
         cache_hit_rate=service.cache.hit_rate(),
+        queue_depth_max=_hist(snap, "serve_queue_depth", "max"),
+        span_coverage=coverage,
     )

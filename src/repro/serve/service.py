@@ -30,7 +30,15 @@ its own:
 * ``cache_lookups{kind=serve_exec}`` + ``jit_traces{kind=serve}`` — the
   executable-cache hit rate and the zero-retrace-after-warmup proof,
 * ``record_solve("serve.dispatch", ...)`` — Krylov iteration stats and
-  solve wall time per dispatched batch.
+  solve wall time per dispatched batch,
+* ``serve_queue_depth`` gauge + histogram — admission depth sampled at
+  every drain (separates overload from a slow executable),
+* **span trees** — every request gets a root span at :meth:`submit`
+  (trace-ID minted there) with ``queue_wait`` / ``dispatch`` / ``solve`` /
+  ``slice`` children summing exactly to its end-to-end latency; the tree
+  rides back on ``SolveResponse.trace`` and every completed request is
+  recorded in the :mod:`~repro.telemetry.spans` flight recorder, which
+  auto-dumps on shed / expiry / non-convergence / failure.
 
 Non-converged solves follow the PR-5 policy
 (``telemetry.nonconverged_policy()``): ``"warn"`` answers ``"ok"`` with a
@@ -137,17 +145,30 @@ class SolveService:
         already resolved with an ``"overloaded"`` response (typed
         :class:`Overloaded` error from ``result()``) — overload is shed, not
         queued."""
-        now = time.monotonic()
+        now_ns = time.monotonic_ns()
+        now = now_ns / 1e9
         pending = PendingSolve(request)
+        # root of the request's span tree: trace_id minted here, carried to
+        # the response via the dispatch path (NULL_SPAN when telemetry off)
+        pending.span = telemetry.span_root(
+            "serve.request", start_ns=now_ns,
+            request_id=request.request_id, backend=request.backend,
+            method=request.spec.method)
         deadline = None if request.timeout is None else now + request.timeout
         with self._lock:
             if len(self._queue) >= self.queue_limit:
                 telemetry.counter_inc("serve_requests", outcome="shed")
+                root = pending.span.finish(end_ns=now_ns, outcome="shed")
+                telemetry.flight_record(
+                    root, outcome="shed", request_id=request.request_id,
+                    backend=request.backend, queue_limit=self.queue_limit)
+                telemetry.flight_autodump("shed")
                 pending._resolve(SolveResponse(
                     status="overloaded",
                     error=Overloaded(
                         f"admission queue full ({self.queue_limit} pending)"),
                     t_submit=now, t_dispatch=now, t_done=now,
+                    trace=root.to_dict(),
                 ))
                 return pending
             self._queue.append((pending, now, deadline))
@@ -169,7 +190,15 @@ class SolveService:
         path used by tests and by :meth:`stop`."""
         with self._lock:
             batch, self._queue = self._queue, []
+        self._sample_queue_depth(len(batch))
         return self._dispatch(batch)
+
+    def _sample_queue_depth(self, depth: int) -> None:
+        """Admission queue depth at drain time — the gauge that separates
+        'the service is loaded' (depth grows) from 'one executable is slow'
+        (depth normal, queue-wait p99 grows)."""
+        telemetry.gauge_set("serve_queue_depth", depth)
+        telemetry.histogram_observe("serve_queue_depth", depth)
 
     def _worker_loop(self) -> None:
         while True:
@@ -183,6 +212,7 @@ class SolveService:
                 time.sleep(self.window)
             with self._lock:
                 batch, self._queue = self._queue, []
+            self._sample_queue_depth(len(batch))
             self._dispatch(batch)
 
     def _dispatch(self, entries) -> int:
@@ -190,18 +220,30 @@ class SolveService:
         ``(pending, t_submit, deadline)`` triples."""
         if not entries:
             return 0
-        now = time.monotonic()
+        now_ns = time.monotonic_ns()
+        now = now_ns / 1e9
         groups: OrderedDict = OrderedDict()
         n_done = 0
         for pending, t_submit, deadline in entries:
             if deadline is not None and now > deadline:
                 telemetry.counter_inc("serve_requests", outcome="expired")
+                root = pending.span
+                root.child("queue_wait",
+                           start_ns=root.start_ns).finish(end_ns=now_ns)
+                root.finish(end_ns=now_ns, outcome="expired")
+                telemetry.flight_record(
+                    root, outcome="expired",
+                    request_id=pending.request.request_id,
+                    backend=pending.request.backend,
+                    waited_s=round(now - t_submit, 4))
+                telemetry.flight_autodump("expired")
                 pending._resolve(SolveResponse(
                     status="expired",
                     error=DeadlineExpired(
                         f"request {pending.request.request_id} expired after "
                         f"{now - t_submit:.3f}s in the admission queue"),
                     t_submit=t_submit, t_dispatch=now, t_done=now,
+                    trace=root.to_dict(),
                 ))
                 n_done += 1
                 continue
@@ -220,43 +262,84 @@ class SolveService:
         template = pendings[0].request
         b = len(pendings)
         padded = min(pad_bucket(b), self.max_batch)
-        t_dispatch = time.monotonic()
-        for t in submits:
+        t_dispatch_ns = time.monotonic_ns()
+        t_dispatch = t_dispatch_ns / 1e9
+        roots = [p.span for p in pendings]
+        # segment 1: queue_wait — submit (the root's start) → dispatch
+        for t, root in zip(submits, roots):
             telemetry.histogram_observe(
                 "serve_queue_wait_us", 1e6 * (t_dispatch - t),
                 backend=template.backend)
+            root.child("queue_wait",
+                       start_ns=root.start_ns).finish(end_ns=t_dispatch_ns)
         telemetry.histogram_observe("serve_batch_size", b,
                                     backend=template.backend)
         try:
             fn, cache_hit = self.cache.get(key, padded, template)
+            t_lookup_ns = time.monotonic_ns()
             leaves = tuple(
                 _stack_padded([p.request.leaves[j] for p in pendings], padded)
                 for j in range(len(template.leaves))
             )
             rhs = _stack_padded([p.request.rhs for p in pendings], padded)
+            t_solve_ns = time.monotonic_ns()
+            # segment 2: dispatch — cache lookup + pad/stack to the bucket
+            # (the batch-level walls are duplicated into every member's
+            # tree: each response carries its complete timeline)
+            for root in roots:
+                d = root.child("dispatch", start_ns=t_dispatch_ns,
+                               batch=b, padded=padded, cache_hit=cache_hit)
+                d.child("cache_lookup",
+                        start_ns=t_dispatch_ns).finish(end_ns=t_lookup_ns)
+                d.child("pad",
+                        start_ns=t_lookup_ns).finish(end_ns=t_solve_ns)
+                d.finish(end_ns=t_solve_ns)
             x_pad, info_pad = fn(template.plan, leaves, rhs)
             x = np.asarray(x_pad)[:b]
             converged = np.asarray(info_pad.converged)[:b]
             iters = np.asarray(info_pad.iters)[:b]
             residual = np.asarray(info_pad.residual)[:b]
+            # segment 3: solve — the vmapped device solve incl. the host
+            # transfer that synchronizes on it (compiled on a cache miss)
+            t_solved_ns = time.monotonic_ns()
+            for root in roots:
+                root.child("solve", start_ns=t_solve_ns,
+                           compiled=not cache_hit).finish(end_ns=t_solved_ns)
         except Exception as err:  # compile/solve failure → fail the batch
-            t_done = time.monotonic()
+            t_done_ns = time.monotonic_ns()
+            t_done = t_done_ns / 1e9
             telemetry.counter_inc("serve_requests", value=b, outcome="failed")
-            for p, t in members:
+            for (p, t), root in zip(members, roots):
+                root.finish(end_ns=t_done_ns, outcome="failed",
+                            error=type(err).__name__)
+                telemetry.flight_record(
+                    root, outcome="failed", request_id=p.request.request_id,
+                    admission=_key_tag(key), bucket=padded, batch=b,
+                    error=repr(err))
                 p._resolve(SolveResponse(
                     status="failed", error=err, batch_size=b,
-                    t_submit=t, t_dispatch=t_dispatch, t_done=t_done))
+                    t_submit=t, t_dispatch=t_dispatch, t_done=t_done,
+                    trace=root.to_dict()))
+            telemetry.flight_autodump("failed")
             return
-        t_done = time.monotonic()
         info_b = jax.tree_util.tree_map(
             lambda leaf: np.asarray(leaf)[:b], info_pad)
+        t_done_ns = time.monotonic_ns()
+        t_done = t_done_ns / 1e9
         telemetry.record_solve(
             "serve.dispatch", info_b, method=template.spec.method,
             precond=template.spec.precond_name,
-            backend=template.backend, wall_us=1e6 * (t_done - t_dispatch),
+            backend=template.backend,
+            wall_us=1e-3 * (t_done_ns - t_dispatch_ns),
             batch=b, padded=padded, cache_hit=cache_hit)
         policy = telemetry.nonconverged_policy()
+        any_nonconverged = False
         for i, (p, t) in enumerate(members):
+            root = roots[i]
+            # segment 4: slice — per-request extraction from the padded
+            # batch; ends at t_done, so the four segments sum exactly to
+            # the response's end-to-end latency (t_done - t_submit)
+            root.child("slice", start_ns=t_solved_ns).finish(end_ns=t_done_ns)
             resp = SolveResponse(
                 status="ok", u=jnp.asarray(x[i]),
                 info=jax.tree_util.tree_map(lambda leaf: leaf[i], info_b),
@@ -273,6 +356,7 @@ class SolveService:
                     resp.u = None
                     telemetry.counter_inc("serve_requests",
                                           outcome="nonconverged")
+                    any_nonconverged = True
                 else:
                     if policy == "warn":
                         warnings.warn(msg, ConvergenceWarning, stacklevel=2)
@@ -282,7 +366,19 @@ class SolveService:
             telemetry.histogram_observe(
                 "serve_e2e_us", 1e6 * (t_done - t),
                 backend=template.backend)
+            root.finish(end_ns=t_done_ns, outcome=resp.status,
+                        converged=bool(converged[i]), iters=int(iters[i]))
+            resp.trace = root.to_dict()
+            telemetry.flight_record(
+                root, outcome=resp.status,
+                request_id=p.request.request_id, admission=_key_tag(key),
+                bucket=padded, batch=b, backend=template.backend,
+                cache_hit=cache_hit, iterations=int(iters[i]),
+                final_residual=float(residual[i]),
+                converged=bool(converged[i]))
             p._resolve(resp)
+        if any_nonconverged:
+            telemetry.flight_autodump("nonconverged")
 
     # -- warmup ------------------------------------------------------------
     def warmup(self, request: SolveRequest, batch_sizes=(1,),
@@ -293,19 +389,29 @@ class SolveService:
         template — warmup runs real (cold) solves on copies of it so the
         first tenant wave is a pure cache hit."""
         key = admission_key(request)
-        for bs in batch_sizes:
-            padded = min(pad_bucket(int(bs)), self.max_batch)
-            if pin:
-                self.cache.pin(key, padded)
-            fn, hit = self.cache.get(key, padded, request)
-            if not hit:
-                leaves = tuple(
-                    _stack_padded([request.leaves[j]], padded)
-                    for j in range(len(request.leaves))
-                )
-                rhs = _stack_padded([request.rhs], padded)
-                x, _ = fn(request.plan, leaves, rhs)
-                jax.block_until_ready(x)
+        with telemetry.span("serve.warmup", backend=request.backend,
+                            buckets=len(tuple(batch_sizes))):
+            for bs in batch_sizes:
+                padded = min(pad_bucket(int(bs)), self.max_batch)
+                if pin:
+                    self.cache.pin(key, padded)
+                fn, hit = self.cache.get(key, padded, request)
+                if not hit:
+                    leaves = tuple(
+                        _stack_padded([request.leaves[j]], padded)
+                        for j in range(len(request.leaves))
+                    )
+                    rhs = _stack_padded([request.rhs], padded)
+                    x, _ = fn(request.plan, leaves, rhs)
+                    jax.block_until_ready(x)
+
+
+def _key_tag(key) -> str:
+    """Short printable admission-key tag for flight-recorder context (the
+    raw key holds object ids and a lowered form signature — not JSON)."""
+    plan_id, _form, _bc, backend, spec = key
+    return (f"plan={plan_id & 0xFFFFFFFF:08x};backend={backend};"
+            f"method={spec.method}")
 
 
 def _stack_padded(arrays, padded: int) -> jnp.ndarray:

@@ -18,6 +18,15 @@ The paper's claim is *efficiency*; this package is how the repo sees it:
   gauges, iteration/wall-time histograms) plus a structured event stream
   with JSON-lines export in the ``BENCH_JSON`` row format; rendered by
   ``python -m repro.telemetry.report``.
+* **Request tracing** — :func:`span_root` / :func:`span` build host-side
+  span trees with one propagated trace id per request (the serve tier
+  opens one per ``submit()``; closed spans fold into ``span_us``
+  histograms and stream as ``span/<name>`` rows); a bounded **flight
+  recorder** (:func:`configure_flight` / :func:`flight_dump`) keeps the
+  last K completed request traces and auto-dumps them on
+  nonconverged/expired/shed; :func:`define_slo` tracks latency SLO
+  attainment and burn rate against any histogram, surfaced in
+  :func:`snapshot` and ``report --slo``.
 
 Disabled by default and zero-cost when off: recording entry points return
 after one boolean check, annotations are trace-time-only, nothing telemetry
@@ -57,6 +66,26 @@ from .metrics import (  # noqa: F401
     reset,
     snapshot,
 )
+from .slo import (  # noqa: F401
+    SLO,
+    clear_slos,
+    define_slo,
+    defined_slos,
+    slo_status,
+)
+from .spans import (  # noqa: F401
+    NULL_SPAN,
+    Span,
+    clear_flight,
+    configure_flight,
+    current_span,
+    flight_autodump,
+    flight_dump,
+    flight_record,
+    flight_records,
+    span,
+    span_root,
+)
 from .trace import annotate, capture  # noqa: F401
 
 __all__ = [
@@ -69,6 +98,12 @@ __all__ = [
     "counter_inc", "gauge_set", "histogram_observe", "count_trace",
     "count_cache", "jit_trace_total", "snapshot", "export_jsonl",
     "metric_rows",
+    # spans / flight recorder
+    "Span", "NULL_SPAN", "span", "span_root", "current_span",
+    "configure_flight", "flight_record", "flight_records", "flight_dump",
+    "flight_autodump", "clear_flight",
+    # SLOs
+    "SLO", "define_slo", "defined_slos", "clear_slos", "slo_status",
     # events / convergence
     "record_event", "record_solve", "record_assembly", "check_convergence",
     "event_log", "clear_events", "ConvergenceWarning", "NonConvergedError",

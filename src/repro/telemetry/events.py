@@ -26,13 +26,13 @@ flag to be reported.
 
 from __future__ import annotations
 
-import json
+import threading
 import time
 import warnings
 
 import numpy as np
 
-from . import metrics
+from . import metrics, spans
 
 __all__ = [
     "ConvergenceWarning",
@@ -47,6 +47,9 @@ __all__ = [
 
 _EVENTS: list[dict] = []
 _EVENT_LIMIT = 65536
+# guards _EVENTS across recorder threads (the serve dispatch worker records
+# concurrently with driver-thread exports)
+_EVENTS_LOCK = threading.Lock()
 
 
 class ConvergenceWarning(UserWarning):
@@ -60,11 +63,13 @@ class NonConvergedError(RuntimeError):
 
 def event_log() -> list[dict]:
     """The in-memory event list (bounded; newest last)."""
-    return list(_EVENTS)
+    with _EVENTS_LOCK:
+        return list(_EVENTS)
 
 
 def clear_events() -> None:
-    _EVENTS.clear()
+    with _EVENTS_LOCK:
+        _EVENTS.clear()
 
 
 def _derived(fields: dict) -> str:
@@ -91,11 +96,17 @@ def record_event(kind: str, name: str, *, wall_us: float | None = None,
     ev = {"kind": kind, "name": name, "t": time.time(), **clean}
     if wall is not None:
         ev["wall_us"] = round(float(wall), 1)
-    if len(_EVENTS) < _EVENT_LIMIT:
-        _EVENTS.append(ev)
+    # span-awareness: an event recorded under an open span inherits its
+    # trace identity, so per-request timelines include their solve events
+    sp = spans.current_span()
+    if sp is not None and sp is not spans.NULL_SPAN:
+        ev["trace_id"] = sp.trace_id
+        ev["span_id"] = sp.span_id
+    with _EVENTS_LOCK:
+        if len(_EVENTS) < _EVENT_LIMIT:
+            _EVENTS.append(ev)
     metrics.counter_inc("events", 1, kind=kind)
-    path = metrics.jsonl_path()
-    if path:
+    if metrics.jsonl_path():
         row = {
             "name": f"{kind}/{name}",
             "us_per_call": ev.get("wall_us", 0.0),
@@ -103,8 +114,10 @@ def record_event(kind: str, name: str, *, wall_us: float | None = None,
             "kind": kind,
             **clean,
         }
-        with open(path, "a") as f:
-            f.write(json.dumps(row) + "\n")
+        if "trace_id" in ev:
+            row["trace_id"] = ev["trace_id"]
+            row["span_id"] = ev["span_id"]
+        metrics.append_jsonl_row(row)
     return ev
 
 

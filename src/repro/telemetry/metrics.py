@@ -50,9 +50,13 @@ __all__ = [
     "count_trace",
     "count_cache",
     "jit_trace_total",
+    "histogram_values",
     "snapshot",
     "reset",
     "export_jsonl",
+    "append_jsonl_row",
+    "register_snapshot_section",
+    "register_row_provider",
 ]
 
 # one observation cap per histogram key: summaries stay exact for any run
@@ -74,6 +78,27 @@ class _State:
 
 
 _STATE = _State()
+
+# serializes JSONL appends across threads (events, spans, metric exports all
+# share one stream file) — a row is always exactly one line
+_IO_LOCK = threading.Lock()
+
+# extension hooks: sibling modules (slo, spans) register here instead of
+# being imported, keeping this module dependency-free within the package
+_SNAPSHOT_SECTIONS: dict[str, Any] = {}
+_ROW_PROVIDERS: list = []
+
+
+def register_snapshot_section(name: str, fn) -> None:
+    """Add a computed section to :func:`snapshot` — ``fn()`` returning a
+    dict (or ``None``/falsy to omit the section this time)."""
+    _SNAPSHOT_SECTIONS[name] = fn
+
+
+def register_row_provider(fn) -> None:
+    """Add a ``BENCH_JSON``-row source to :func:`metric_rows` — ``fn()``
+    returning a list of row dicts."""
+    _ROW_PROVIDERS.append(fn)
 
 
 def enable(jsonl: str | None = None, on_nonconverged: str | None = None) -> None:
@@ -241,6 +266,18 @@ def count_cache(kind: str, hit: bool) -> None:
     counter_inc("cache_lookups", 1, kind=kind, outcome="hit" if hit else "miss")
 
 
+def histogram_values(name: str) -> dict[tuple, list]:
+    """Raw observations of every series of one histogram family:
+    ``{labels_tuple: [values, oldest first]}`` — what the SLO evaluator
+    windows over.  Copies, so callers never race the recording paths."""
+    with _STATE.lock:
+        return {
+            labels: list(v)
+            for (n, labels), v in _STATE.hists.items()
+            if n == name
+        }
+
+
 def jit_trace_total(kind: str | None = None) -> int:
     """Sum of ``jit_traces`` counters, optionally restricted to one kind —
     comparable against the legacy per-subsystem counters."""
@@ -288,7 +325,7 @@ def snapshot() -> dict:
         counters = dict(_STATE.counters)
         gauges = dict(_STATE.gauges)
         hists = {k: list(v) for k, v in _STATE.hists.items()}
-    return {
+    snap = {
         "counters": {
             f"{name}{_label_str(labels)}": v for (name, labels), v in counters.items()
         },
@@ -300,6 +337,11 @@ def snapshot() -> dict:
             for (name, labels), v in hists.items()
         },
     }
+    for name, fn in _SNAPSHOT_SECTIONS.items():
+        section = fn()
+        if section:
+            snap[name] = section
+    return snap
 
 
 def reset() -> None:
@@ -336,7 +378,22 @@ def metric_rows() -> list[dict]:
             "derived": f"count={s['count']};p50={s['p50']:.6g};p99={s['p99']:.6g}",
             "kind": "metric", "metric": "histogram", **s,
         })
+    for provider in _ROW_PROVIDERS:
+        rows.extend(provider())
     return rows
+
+
+def append_jsonl_row(row: dict, path: str | None = None) -> None:
+    """Append one row to the JSONL stream (default: the configured file)
+    under the shared I/O lock — concurrent recorders always produce whole
+    single-line rows.  No-op without a path."""
+    path = path or _STATE.jsonl
+    if not path:
+        return
+    line = json.dumps(row) + "\n"
+    with _IO_LOCK:
+        with open(path, "a") as f:
+            f.write(line)
 
 
 def export_jsonl(path: str | None = None) -> list[dict]:
@@ -346,9 +403,10 @@ def export_jsonl(path: str | None = None) -> list[dict]:
     rows = metric_rows()
     path = path or _STATE.jsonl
     if path:
-        with open(path, "a") as f:
-            for row in rows:
-                f.write(json.dumps(row) + "\n")
+        lines = "".join(json.dumps(row) + "\n" for row in rows)
+        with _IO_LOCK:
+            with open(path, "a") as f:
+                f.write(lines)
     return rows
 
 

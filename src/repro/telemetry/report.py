@@ -17,7 +17,7 @@ import json
 import sys
 from collections import defaultdict
 
-from . import metrics
+from . import metrics, slo
 
 
 def load_rows(path: str) -> list[dict]:
@@ -104,6 +104,53 @@ def histogram_table(rows: list[dict]) -> str:
     return "\n".join(out)
 
 
+def span_table(rows: list[dict]) -> str:
+    """Per-span-name timing summary plus the number of distinct traces —
+    the aggregate view of a spans-instrumented run (use the raw ``span/``
+    rows' ``trace_id`` to reassemble one request's timeline)."""
+    out = [
+        "| span | n | traces | mean | max |",
+        "|---|---|---|---|---|",
+    ]
+    groups: dict[str, list[dict]] = defaultdict(list)
+    for r in rows:
+        if r.get("kind") == "span":
+            groups[r["name"].removeprefix("span/")].append(r)
+    for name, rs in groups.items():
+        walls = [r["us_per_call"] for r in rs]
+        traces = len({r.get("trace_id") for r in rs})
+        out.append(
+            f"| {name} | {len(rs)} | {traces} "
+            f"| {sum(walls) / len(walls):.0f}µs | {max(walls):.0f}µs |"
+        )
+    return "\n".join(out)
+
+
+def slo_table(rows: list[dict]) -> str:
+    """Objective attainment / burn-rate view of ``kind="slo"`` rows (a
+    repeated objective keeps its latest row)."""
+    out = [
+        "| SLO | objective p99 | observed p99 | n | attainment | burn rate | status |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    latest: dict[str, dict] = {}
+    for r in rows:
+        if r.get("kind") == "slo":
+            latest[r["name"]] = r
+    for name, r in latest.items():
+        status = "✓ met" if r.get("met") else "**✗ BURNING**"
+        out.append(
+            f"| {name.removeprefix('slo/')} "
+            f"| {_fmt(r.get('objective_us'), '.0f')}µs "
+            f"| {_fmt(r.get('p99_us'), '.0f')}µs | {_fmt(r.get('count'))} "
+            f"| {_fmt(r.get('attainment'), '.4f')} "
+            f"| {_fmt(r.get('burn_rate'), '.2f')} | {status} |"
+        )
+    if len(out) == 2:
+        out.append("| (no SLO rows) | — | — | — | — | — | — |")
+    return "\n".join(out)
+
+
 def render(rows: list[dict]) -> str:
     parts = []
     kinds = {r.get("kind") for r in rows}
@@ -111,11 +158,17 @@ def render(rows: list[dict]) -> str:
         parts += ["### Solves\n", solve_table(rows), ""]
     if "assembly" in kinds:
         parts += ["### Assemblies\n", assembly_table(rows), ""]
+    if "span" in kinds:
+        parts += ["### Spans\n", span_table(rows), ""]
+    if "slo" in kinds:
+        parts += ["### SLOs\n", slo_table(rows), ""]
     if any(r.get("metric") in ("counter", "gauge") for r in rows):
         parts += ["### Counters & gauges\n", metric_table(rows), ""]
     if any(r.get("metric") == "histogram" for r in rows):
         parts += ["### Histograms\n", histogram_table(rows), ""]
-    other = [r for r in rows if r.get("kind") not in ("solve", "assembly", "metric")]
+    other = [r for r in rows
+             if r.get("kind") not in ("solve", "assembly", "metric", "span",
+                                      "slo", "flight", "flight_dump")]
     if other:
         parts.append("### Other events\n")
         for r in other:
@@ -133,9 +186,13 @@ def main(argv=None) -> int:
     ap.add_argument("--snapshot", action="store_true",
                     help="render the current in-process metrics registry "
                          "instead of reading a file")
+    ap.add_argument("--slo", action="store_true",
+                    help="render only the SLO attainment / burn-rate table "
+                         "(from kind=\"slo\" rows, or the live objectives "
+                         "with --snapshot)")
     args = ap.parse_args(argv)
     if args.snapshot:
-        rows = metrics.metric_rows()
+        rows = slo.slo_rows() if args.slo else metrics.metric_rows()
     else:
         try:
             rows = load_rows(args.path)
@@ -144,6 +201,10 @@ def main(argv=None) -> int:
                   f"(jsonl=...) to produce one, or use --snapshot)",
                   file=sys.stderr)
             return 2
+    if args.slo:
+        print("### SLOs\n")
+        print(slo_table(rows))
+        return 0
     print(render(rows))
     return 0
 

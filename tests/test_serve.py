@@ -13,6 +13,7 @@ The acceptance-critical properties:
 """
 
 import dataclasses
+import json
 import time
 
 import jax.numpy as jnp
@@ -241,3 +242,122 @@ def test_solve_convenience_inline():
     rq = _wave(1)[0]
     u = svc.solve(rq)  # no worker -> drained inline
     assert u.shape == rq.rhs.shape
+
+
+# ---------------------------------------------------------------------------
+# request tracing: span trees, flight recorder, attribution gauges (PR 10)
+# ---------------------------------------------------------------------------
+
+def test_response_span_tree_segments_sum_to_e2e():
+    with telemetry.enabled():
+        svc = SolveService(window=0.0)
+        svc.warmup(_wave(1)[0], batch_sizes=(4,))
+        pend = [svc.submit(r) for r in _wave(4, seed=3)]
+        svc.drain()
+        for p in pend:
+            resp = p.response()
+            assert resp.ok
+            tree = resp.trace
+            assert tree["name"] == "serve.request"
+            assert tree["tags"]["outcome"] == "ok"
+            assert tree["tags"]["request_id"] == p.request.request_id
+            seg = resp.span_segments_us
+            assert list(seg) == ["queue_wait", "dispatch", "solve", "slice"]
+            # the acceptance criterion: segments cover the full lifetime
+            e2e_us = 1e6 * resp.e2e_s
+            assert sum(seg.values()) == pytest.approx(e2e_us, rel=0.05)
+            # one trace id threads the whole tree
+            ids = {tree["trace_id"]}
+            for c in tree["children"]:
+                ids.add(c["trace_id"])
+            assert ids == {tree["trace_id"]}
+        # distinct requests get distinct trace ids
+        tids = {p.response().trace["trace_id"] for p in pend}
+        assert len(tids) == 4
+
+
+def test_disabled_responses_carry_no_trace():
+    svc = SolveService(window=0.0)
+    pend = [svc.submit(r) for r in _wave(2)]
+    svc.drain()
+    for p in pend:
+        resp = p.response()
+        assert resp.ok and resp.trace is None
+        assert resp.span_segments_us == {}
+
+
+def test_error_paths_carry_traces_and_flight_dumps(tmp_path):
+    flight = str(tmp_path / "flight.jsonl")
+    with telemetry.enabled(on_nonconverged="raise"):
+        telemetry.configure_flight(capacity=32, path=flight)
+        try:
+            # expired
+            svc = SolveService(window=0.0)
+            pend = [svc.submit(r) for r in _wave(1, timeout=1e-3)]
+            time.sleep(0.01)
+            svc.drain()
+            assert pend[0].response().trace["tags"]["outcome"] == "expired"
+            # shed
+            svc2 = SolveService(window=0.0, queue_limit=1)
+            shed = [svc2.submit(r) for r in _wave(2)][1]
+            assert shed.response().trace["tags"]["outcome"] == "shed"
+            svc2.drain()
+            # forced nonconverged
+            bad = [dataclasses.replace(r, maxiter=3) for r in _wave(1)]
+            p = svc2.submit(bad[0])
+            svc2.drain()
+            assert p.response().status == "nonconverged"
+            assert p.response().trace["tags"]["outcome"] == "nonconverged"
+        finally:
+            rows = [json.loads(line) for line in open(flight)]
+            reasons = {r["reason"] for r in rows if r["kind"] == "flight_dump"}
+            assert {"expired", "shed", "nonconverged"} <= reasons
+            outcomes = {r.get("outcome") for r in rows if r["kind"] == "flight"}
+            assert {"expired", "shed", "nonconverged"} <= outcomes
+            telemetry.clear_flight()
+            from repro.telemetry import spans as _spans
+            _spans._FLIGHT_PATH = None
+
+
+def test_queue_depth_gauge_sampled_at_drain():
+    with telemetry.enabled():
+        telemetry.reset()  # metrics persist across enabled() scopes
+        svc = SolveService(window=0.0)
+        [svc.submit(r) for r in _wave(3)]
+        svc.drain()
+        snap = telemetry.snapshot()
+        assert snap["gauges"]["serve_queue_depth"] == 3
+        assert snap["histograms"]["serve_queue_depth"]["max"] == 3
+
+
+def test_compile_and_memory_attribution_gauges():
+    with telemetry.enabled():
+        telemetry.reset()
+        svc = SolveService(window=0.0)
+        pend = [svc.submit(r) for r in _wave(2)]
+        svc.drain()
+        assert all(p.response().ok for p in pend)
+        snap = telemetry.snapshot()
+        compile_hists = [k for k in snap["histograms"]
+                         if k.startswith("serve_compile_us")]
+        assert compile_hists, "cache miss must record compile time"
+        assert snap["histograms"][compile_hists[0]]["count"] == 1
+        assert any(k.startswith("serve_exec_compile_us")
+                   for k in snap["gauges"])
+        assert snap["gauges"]["serve_exec_entries"] == len(svc.cache)
+        # steady state: a second wave is a cache hit, no new compile rows
+        pend = [svc.submit(r) for r in _wave(2, seed=5)]
+        svc.drain()
+        snap2 = telemetry.snapshot()
+        assert snap2["histograms"][compile_hists[0]]["count"] == 1
+
+
+def test_load_report_span_coverage():
+    with telemetry.enabled():
+        reqs = _wave(6)
+        with SolveService(window=0.002) as svc:
+            svc.warmup(reqs[0], batch_sizes=(1, 4))
+            report = serve.open_loop_load(svc, reqs, rate=2000.0)
+        assert report.ok == 6
+        assert report.span_coverage == pytest.approx(1.0, rel=0.05)
+        assert report.queue_depth_max >= 1

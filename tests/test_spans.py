@@ -1,0 +1,334 @@
+"""repro.telemetry spans / SLOs / flight recorder — the PR-10 tentpole.
+
+Acceptance-critical properties:
+
+* spans are zero-cost no-ops when telemetry is disabled (NULL_SPAN) and
+  toggling them never retraces a jitted function;
+* a span tree propagates one trace_id root → children, folds every closed
+  span into the ``span_us`` histogram, and streams valid JSONL rows;
+* tag values that are tracers are dropped, never stored;
+* ``record_event`` under an open span inherits its trace identity;
+* ``_EVENTS`` / ``_HIST_LIMIT`` stay bounded under overflow, and
+  concurrent recorders + exporters produce a valid one-row-per-line JSONL
+  stream;
+* SLO attainment / burn rate match hand-computed values and surface in
+  ``snapshot()`` and ``report --slo``;
+* the flight recorder ring is bounded and dumps on demand.
+"""
+
+import json
+import threading
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import telemetry
+from repro.telemetry import events, metrics, report, spans
+
+
+def _reset():
+    telemetry.disable()
+    telemetry.reset()
+    telemetry.clear_events()
+    telemetry.clear_slos()
+    telemetry.clear_flight()
+    spans._FLIGHT_PATH = None
+    metrics._STATE.jsonl = None  # enable() keeps a stale stream otherwise
+
+
+@pytest.fixture(autouse=True)
+def _clean_telemetry():
+    _reset()
+    yield
+    _reset()
+
+
+# ---------------------------------------------------------------------------
+# spans
+# ---------------------------------------------------------------------------
+
+def test_disabled_spans_are_null_and_record_nothing():
+    root = telemetry.span_root("r", x=1)
+    assert root is telemetry.NULL_SPAN
+    assert not root
+    child = root.child("c")
+    assert child is telemetry.NULL_SPAN
+    assert root.finish(outcome="ok") is telemetry.NULL_SPAN
+    assert root.to_dict() is None
+    with telemetry.span("ctx") as sp:
+        assert sp is telemetry.NULL_SPAN
+    assert telemetry.snapshot()["histograms"] == {}
+
+
+def test_span_tree_trace_id_propagation_and_fold():
+    telemetry.enable()
+    root = telemetry.span_root("request", backend="csr")
+    a = root.child("phase_a")
+    a.finish()
+    b = root.child("phase_b")
+    ba = b.child("phase_b_inner")
+    ba.finish()
+    b.finish()
+    root.finish(outcome="ok")
+    assert a.trace_id == b.trace_id == ba.trace_id == root.trace_id
+    assert ba.parent_id == b.span_id and b.parent_id == root.span_id
+    d = root.to_dict()
+    assert [c["name"] for c in d["children"]] == ["phase_a", "phase_b"]
+    assert d["children"][1]["children"][0]["name"] == "phase_b_inner"
+    assert d["tags"] == {"backend": "csr", "outcome": "ok"}
+    assert d["wall_us"] >= d["children"][0]["wall_us"] >= 0
+    snap = telemetry.snapshot()
+    names = {k for k in snap["histograms"] if k.startswith("span_us")}
+    assert {"span_us{span=request}", "span_us{span=phase_a}",
+            "span_us{span=phase_b}", "span_us{span=phase_b_inner}"} <= names
+
+
+def test_span_rows_streamed_as_jsonl(tmp_path):
+    stream = str(tmp_path / "t.jsonl")
+    telemetry.enable(jsonl=stream)
+    root = telemetry.span_root("outer")
+    root.child("inner").finish()
+    root.finish()
+    rows = [json.loads(line) for line in open(stream)]
+    by_name = {r["name"]: r for r in rows}
+    assert by_name["span/inner"]["trace_id"] == root.trace_id
+    assert by_name["span/inner"]["parent_id"] == root.span_id
+    assert by_name["span/outer"]["parent_id"] is None
+    assert by_name["span/outer"]["us_per_call"] >= 0
+
+
+def test_span_tags_drop_tracers():
+    telemetry.enable()
+    root = telemetry.span_root("r")
+
+    @jax.jit
+    def f(x):
+        root.tag(leaked=x)
+        return x * 2
+
+    f(jnp.ones(3))
+    root.finish(kept=7)
+    assert "leaked" not in root.tags
+    assert root.tags["kept"] == 7
+
+
+def test_span_toggle_never_retraces():
+    traces = []
+
+    @jax.jit
+    def f(x):
+        traces.append(1)
+        with telemetry.span("inside_jit"):
+            return x + 1
+
+    x = jnp.ones(4)
+    f(x)
+    telemetry.enable()
+    f(x)
+    telemetry.disable()
+    f(x)
+    assert len(traces) == 1
+
+
+def test_record_event_inherits_current_span():
+    telemetry.enable()
+    with telemetry.span("driver") as sp:
+        events.record_event("solve", "inner", wall_us=1.0, iterations=2)
+    ev = telemetry.event_log()[-1]
+    assert ev["trace_id"] == sp.trace_id
+    assert ev["span_id"] == sp.span_id
+    # outside any span: no trace identity attached
+    events.record_event("solve", "outer", wall_us=1.0)
+    assert "trace_id" not in telemetry.event_log()[-1]
+
+
+def test_open_children_closed_with_parent():
+    telemetry.enable()
+    root = telemetry.span_root("r")
+    dangling = root.child("dangling")
+    root.finish()
+    assert dangling.end_ns == root.end_ns
+
+
+# ---------------------------------------------------------------------------
+# bounds + thread-safety (satellite)
+# ---------------------------------------------------------------------------
+
+def test_event_log_bounded_under_overflow(monkeypatch):
+    monkeypatch.setattr(events, "_EVENT_LIMIT", 16)
+    telemetry.enable()
+    for i in range(64):
+        events.record_event("solve", f"e{i}", wall_us=1.0)
+    log = telemetry.event_log()
+    assert len(log) == 16
+    assert log[0]["name"] == "e0"  # oldest kept, overflow dropped
+    # the counter still sees every event even after the log saturates
+    snap = telemetry.snapshot()
+    assert snap["counters"]["events{kind=solve}"] == 64
+
+
+def test_histogram_bounded_under_overflow(monkeypatch):
+    monkeypatch.setattr(metrics, "_HIST_LIMIT", 8)
+    telemetry.enable()
+    for i in range(50):
+        telemetry.histogram_observe("h", float(i))
+    s = telemetry.snapshot()["histograms"]["h"]
+    assert s["count"] == 8
+    assert s["max"] == 7.0  # first _HIST_LIMIT observations kept
+
+
+def test_concurrent_record_and_export_valid_jsonl(tmp_path):
+    stream = str(tmp_path / "cc.jsonl")
+    telemetry.enable(jsonl=stream)
+    stop = threading.Event()
+    errors = []
+
+    def recorder(k):
+        i = 0
+        while not stop.is_set():
+            try:
+                events.record_event("solve", f"t{k}", wall_us=1.0, i=i)
+                telemetry.histogram_observe("cc_us", float(i), thread=k)
+                root = telemetry.span_root("cc")
+                root.child("c").finish()
+                root.finish()
+            except Exception as e:  # pragma: no cover
+                errors.append(e)
+                return
+            i += 1
+
+    def exporter():
+        while not stop.is_set():
+            try:
+                telemetry.export_jsonl()
+                telemetry.event_log()
+            except Exception as e:  # pragma: no cover
+                errors.append(e)
+                return
+
+    threads = [threading.Thread(target=recorder, args=(k,)) for k in range(3)]
+    threads.append(threading.Thread(target=exporter))
+    for t in threads:
+        t.start()
+    import time as _time
+    _time.sleep(0.4)
+    stop.set()
+    for t in threads:
+        t.join()
+    assert not errors
+    n = 0
+    with open(stream) as f:
+        for line in f:
+            row = json.loads(line)  # every line is one complete JSON row
+            assert "name" in row
+            n += 1
+    assert n > 0
+
+
+# ---------------------------------------------------------------------------
+# SLOs (tentpole part 3)
+# ---------------------------------------------------------------------------
+
+def test_slo_attainment_and_burn_rate():
+    telemetry.enable()
+    # 97 fast + 3 slow observations against a 100us objective
+    for _ in range(97):
+        telemetry.histogram_observe("serve_e2e_us", 50.0, backend="csr")
+    for _ in range(3):
+        telemetry.histogram_observe("serve_e2e_us", 500.0, backend="csr")
+    telemetry.define_slo("csr", p99_us=100.0, backend="csr")
+    st = telemetry.slo_status()["csr"]
+    assert st["count"] == 100
+    assert st["attainment"] == pytest.approx(0.97)
+    assert st["burn_rate"] == pytest.approx(3.0)  # 3% bad / 1% budget
+    assert not st["met"]
+    # label filter: a matfree-only SLO sees none of the csr series
+    telemetry.define_slo("mf", p99_us=100.0, backend="matfree")
+    st_mf = telemetry.slo_status()["mf"]
+    assert st_mf["count"] == 0 and st_mf["met"] and st_mf["burn_rate"] == 0.0
+
+
+def test_slo_window_uses_most_recent_observations():
+    telemetry.enable()
+    for _ in range(50):
+        telemetry.histogram_observe("serve_e2e_us", 500.0)
+    for _ in range(50):
+        telemetry.histogram_observe("serve_e2e_us", 50.0)
+    telemetry.define_slo("recent", p99_us=100.0, window=50)
+    st = telemetry.slo_status()["recent"]
+    assert st["attainment"] == pytest.approx(1.0)
+    assert st["met"]
+
+
+def test_slo_in_snapshot_and_rows_and_report(tmp_path, capsys):
+    telemetry.enable()
+    telemetry.histogram_observe("serve_e2e_us", 10.0)
+    telemetry.define_slo("all", p99_us=1000.0)
+    snap = telemetry.snapshot()
+    assert snap["slo"]["all"]["met"]
+    rows = telemetry.metric_rows()
+    slo_rows = [r for r in rows if r["kind"] == "slo"]
+    assert slo_rows and slo_rows[0]["name"] == "slo/all"
+    stream = str(tmp_path / "s.jsonl")
+    telemetry.export_jsonl(stream)
+    assert report.main([stream, "--slo"]) == 0
+    out = capsys.readouterr().out
+    assert "SLOs" in out and "✓ met" in out
+    assert report.main(["--snapshot", "--slo"]) == 0
+
+
+def test_snapshot_has_no_slo_section_without_objectives():
+    telemetry.enable()
+    telemetry.histogram_observe("serve_e2e_us", 10.0)
+    assert "slo" not in telemetry.snapshot()
+
+
+# ---------------------------------------------------------------------------
+# flight recorder (tentpole part 2)
+# ---------------------------------------------------------------------------
+
+def test_flight_ring_bounded_and_ordered():
+    telemetry.enable()
+    telemetry.configure_flight(capacity=4)
+    root = telemetry.span_root("r")
+    root.finish()
+    for i in range(10):
+        telemetry.flight_record(root, outcome="ok", seq=i)
+    recs = telemetry.flight_records()
+    assert [r["seq"] for r in recs] == [6, 7, 8, 9]
+    assert recs[0]["trace"]["name"] == "r"
+
+
+def test_flight_dump_and_autodump(tmp_path):
+    telemetry.enable()
+    path = str(tmp_path / "flight.jsonl")
+    telemetry.configure_flight(capacity=8, path=path)
+    root = telemetry.span_root("r")
+    root.finish()
+    telemetry.flight_record(root, outcome="nonconverged", request_id=7)
+    n = telemetry.flight_autodump("nonconverged")
+    assert n == 1
+    lines = [json.loads(line) for line in open(path)]
+    assert lines[0]["kind"] == "flight_dump"
+    assert lines[0]["reason"] == "nonconverged"
+    assert lines[1]["kind"] == "flight"
+    assert lines[1]["request_id"] == 7
+    # on-demand dump appends another block
+    assert telemetry.flight_dump(path, reason="manual") == 1
+    assert telemetry.snapshot()["counters"]["flight_dumps{reason=manual}"] == 1
+
+
+def test_flight_autodump_without_path_is_noop():
+    telemetry.enable()  # no jsonl stream, no explicit flight path
+    root = telemetry.span_root("r")
+    root.finish()
+    telemetry.flight_record(root, outcome="shed")
+    assert telemetry.flight_autodump("shed") == 0
+    assert len(telemetry.flight_records()) == 1  # still held for later
+
+
+def test_flight_disabled_records_nothing():
+    root = telemetry.span_root("r")
+    assert telemetry.flight_record(root, outcome="ok") is None
+    assert telemetry.flight_records() == []
